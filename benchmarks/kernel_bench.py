@@ -1,0 +1,75 @@
+"""Kernel micro-benchmarks: cascade variants + FuseMax ops on this host.
+
+Wall-clock on CPU is NOT the perf deliverable (the roofline analysis is,
+see EXPERIMENTS.md); these exist to (a) sanity-check relative costs of the
+cascade variants, (b) exercise the jit'd public ops end-to-end, and (c)
+provide a regression baseline for the repo's CI.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import AttnSpec, attention_1pass, attention_2pass, \
+    attention_3pass
+from repro.kernels import fusemax_attention, fusemax_decode
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # µs
+
+
+def cascade_bench() -> list:
+    """3-pass vs 2-pass vs 1-pass numeric cascades (jit'd, CPU)."""
+    rows = []
+    b, h, p, m, e = 1, 4, 256, 2048, 64
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (b, h, p, e), jnp.float32)
+    k = jax.random.normal(kk, (b, h, m, e), jnp.float32)
+    v = jax.random.normal(kv, (b, h, m, e), jnp.float32)
+    spec = AttnSpec(causal=False)
+    fns = {
+        "cascade/3pass": jax.jit(lambda q, k, v: attention_3pass(q, k, v, spec)),
+        "cascade/3pass_deferred": jax.jit(
+            lambda q, k, v: attention_3pass(q, k, v, spec,
+                                            deferred_division=True)),
+        "cascade/2pass": jax.jit(
+            lambda q, k, v: attention_2pass(q, k, v, spec, block=128)),
+        "cascade/1pass": jax.jit(
+            lambda q, k, v: attention_1pass(q, k, v, spec, block=128)),
+    }
+    base = None
+    for name, fn in fns.items():
+        us = _time(fn, q, k, v)
+        base = base or us
+        rows.append((name, round(us, 1), f"rel={us / base:.2f}"))
+    return rows
+
+
+def ops_bench() -> list:
+    """Public fusemax ops (jnp path jit'd; pallas interpret excluded from
+    timing loops — interpret mode is a correctness vehicle, not perf)."""
+    rows = []
+    b, hq, hkv, p, m, e = 1, 8, 2, 256, 2048, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (b, hq, p, e), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, m, e), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, m, e), jnp.float32)
+    fn = jax.jit(lambda q, k, v: fusemax_attention(
+        q, k, v, causal=True, impl="jnp"))
+    rows.append(("ops/fusemax_attention_jnp", round(_time(fn, q, k, v), 1),
+                 f"B={b} Hq={hq} Hkv={hkv} P={p} M={m}"))
+    qd = q[:, :, :1]
+    kv_len = jnp.full((b,), m, jnp.int32)
+    fn = jax.jit(lambda q, k, v, l: fusemax_decode(q, k, v, l, impl="jnp"))
+    rows.append(("ops/fusemax_decode_jnp", round(_time(fn, qd, k, v, kv_len), 1),
+                 f"splits=8 M={m}"))
+    return rows

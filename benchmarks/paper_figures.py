@@ -1,0 +1,159 @@
+"""Benchmarks reproducing the paper's tables/figures (analytical model).
+
+One function per paper artifact; each returns a list of CSV rows
+(name, value, derived-notes).  ``benchmarks.run`` orchestrates.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.analysis.accel_model import (
+    SEQLENS, WORKLOADS, attention_result, e2e_result, geomean,
+)
+from repro.core import (
+    all_attention_cascades, analyze, count_passes, table1,
+)
+
+DESIGNS = ("unfused", "flat", "fusemax")
+
+
+def table1_taxonomy() -> list:
+    """Paper Table I: pass classification, re-derived from the cascade IR."""
+    rows = []
+    expect = {"3pass": 3, "3pass_deferred": 2, "2pass": 2, "2pass_eager": 2,
+              "1pass": 1}
+    for name, cascade in all_attention_cascades().items():
+        n = count_passes(cascade, "M")
+        a = analyze(cascade, "M")
+        rows.append((
+            f"table1/{name}",
+            n,
+            f"expected={expect[name]} ok={n == expect[name]} "
+            f"O(M)-live={sorted(a.full_fiber_tensors())}",
+        ))
+    for bucket, algos in table1().items():
+        rows.append((f"table1/bucket/{bucket}", len(algos), ",".join(algos)))
+    return rows
+
+
+def fig6_utilization() -> list:
+    """Fig. 6: 1D/2D PE-array utilization vs sequence length."""
+    rows = []
+    for wname, w in WORKLOADS.items():
+        for m in SEQLENS:
+            for d in DESIGNS:
+                r = attention_result(d, w, m)
+                rows.append((
+                    f"fig6/{wname}/M={m >> 10}K/{d}",
+                    round(r.util_2d, 3),
+                    f"util_1d={r.util_1d:.3f} "
+                    f"bound={'compute' if r.compute_bound else 'memory'}",
+                ))
+    return rows
+
+
+def fig7_attention_speedup() -> list:
+    """Fig. 7: attention speedup over the unfused baseline."""
+    rows = []
+    fm_over_flat = []
+    fm_over_unf = []
+    for wname, w in WORKLOADS.items():
+        for m in SEQLENS:
+            tu = attention_result("unfused", w, m).time_s
+            tf = attention_result("flat", w, m).time_s
+            tx = attention_result("fusemax", w, m).time_s
+            fm_over_flat.append(tf / tx)
+            fm_over_unf.append(tu / tx)
+            rows.append((
+                f"fig7/{wname}/M={m >> 10}K",
+                round(tu / tx, 2),
+                f"flat_speedup={tu / tf:.2f} fusemax_vs_flat={tf / tx:.2f}",
+            ))
+    rows.append(("fig7/geomean/fusemax_vs_flat",
+                 round(geomean(fm_over_flat), 2), "paper=6.7x"))
+    rows.append(("fig7/geomean/fusemax_vs_unfused",
+                 round(geomean(fm_over_unf), 2), "paper=10x"))
+    return rows
+
+
+def fig8_attention_energy() -> list:
+    """Fig. 8: attention energy relative to the unfused baseline."""
+    rows = []
+    vs_flat, vs_unf = [], []
+    for wname, w in WORKLOADS.items():
+        for m in SEQLENS:
+            eu = attention_result("unfused", w, m).energy_j
+            ef = attention_result("flat", w, m).energy_j
+            ex = attention_result("fusemax", w, m).energy_j
+            vs_flat.append(ex / ef)
+            vs_unf.append(ex / eu)
+            rows.append((
+                f"fig8/{wname}/M={m >> 10}K",
+                round(ex / eu, 3),
+                f"flat_vs_unfused={ef / eu:.3f} fusemax_vs_flat={ex / ef:.3f}",
+            ))
+    rows.append(("fig8/geomean/fusemax_vs_flat",
+                 round(geomean(vs_flat), 3), "paper=0.79"))
+    rows.append(("fig8/geomean/fusemax_vs_unfused",
+                 round(geomean(vs_unf), 3), "paper=0.77"))
+    return rows
+
+
+def fig9_e2e_speedup() -> list:
+    """Fig. 9: end-to-end transformer inference speedup."""
+    rows = []
+    vs_flat, vs_unf, vs_flat_1m = [], [], []
+    for wname, w in WORKLOADS.items():
+        for m in SEQLENS:
+            tu = e2e_result("unfused", w, m).time_s
+            tf = e2e_result("flat", w, m).time_s
+            tx = e2e_result("fusemax", w, m).time_s
+            vs_flat.append(tf / tx)
+            vs_unf.append(tu / tx)
+            if m == 1 << 20:
+                vs_flat_1m.append(tf / tx)
+            rows.append((
+                f"fig9/{wname}/M={m >> 10}K",
+                round(tu / tx, 2),
+                f"fusemax_vs_flat={tf / tx:.2f}",
+            ))
+    rows.append(("fig9/geomean/fusemax_vs_flat",
+                 round(geomean(vs_flat), 2), "paper=5.3x"))
+    rows.append(("fig9/geomean/fusemax_vs_unfused",
+                 round(geomean(vs_unf), 2), "paper=7.6x"))
+    rows.append(("fig9/geomean/fusemax_vs_flat@1M",
+                 round(geomean(vs_flat_1m), 2), "paper=7.5x"))
+    return rows
+
+
+def fig10_e2e_energy() -> list:
+    """Fig. 10: end-to-end inference energy."""
+    rows = []
+    vs_flat, vs_unf = [], []
+    for wname, w in WORKLOADS.items():
+        for m in SEQLENS:
+            eu = e2e_result("unfused", w, m).energy_j
+            ef = e2e_result("flat", w, m).energy_j
+            ex = e2e_result("fusemax", w, m).energy_j
+            vs_flat.append(ex / ef)
+            vs_unf.append(ex / eu)
+            rows.append((
+                f"fig10/{wname}/M={m >> 10}K",
+                round(ex / eu, 3),
+                f"fusemax_vs_flat={ex / ef:.3f}",
+            ))
+    rows.append(("fig10/geomean/fusemax_vs_flat",
+                 round(geomean(vs_flat), 3), "paper=0.83"))
+    rows.append(("fig10/geomean/fusemax_vs_unfused",
+                 round(geomean(vs_unf), 3), "paper=0.82"))
+    return rows
+
+
+ALL_FIGURES = (
+    table1_taxonomy,
+    fig6_utilization,
+    fig7_attention_speedup,
+    fig8_attention_energy,
+    fig9_e2e_speedup,
+    fig10_e2e_energy,
+)

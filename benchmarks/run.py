@@ -1,0 +1,28 @@
+"""Benchmark harness: one function per paper table/figure + kernel benches.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Analytical-model figures
+report their headline value in the middle column (speedup ×, utilization,
+energy ratio — unit noted in `derived`); wall-clock benches report µs.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    from benchmarks.paper_figures import ALL_FIGURES
+    for fig in ALL_FIGURES:
+        for name, value, derived in fig():
+            print(f"{name},{value},{derived}")
+    from benchmarks.kernel_bench import cascade_bench, ops_bench
+    for bench in (cascade_bench, ops_bench):
+        for name, value, derived in bench():
+            print(f"{name},{value},{derived}")
+    print(f"benchmarks/total_wall_s,{time.time() - t0:.1f},", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Batched serving example: continuous batching over the FuseMax decode path.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+
+from repro.launch import serve as serve_mod
+
+if __name__ == "__main__":
+    sys.argv = ["serve", "--arch", "gemma2-9b-smoke", "--requests", "6",
+                "--slots", "4", "--max-len", "128", "--prompt-len", "12",
+                "--new-tokens", "8"] + sys.argv[1:]
+    serve_mod.main()

@@ -1,0 +1,51 @@
+"""End-to-end training driver example: ~100M-parameter decoder LM.
+
+Thin wrapper over the production launcher (repro.launch.train) with a
+~100M config (granite-3-8b family scaled down).  A few hundred steps on
+real hardware; on this CPU container use --steps 20 for a smoke run:
+
+  PYTHONPATH=src python examples/train_100m.py --steps 20
+"""
+import argparse
+import dataclasses
+import sys
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+
+
+def config_100m() -> ModelConfig:
+    base = get_config("granite-3-8b")
+    return dataclasses.replace(
+        base, name="granite-100m", n_layers=8, d_model=640, n_heads=10,
+        n_kv_heads=2, head_dim=64, d_ff=1792, vocab=32768)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    # register the config then delegate to the production launcher
+    import repro.configs as configs
+    cfg = config_100m()
+    configs.ARCHS[cfg.name] = cfg
+    print(f"params ≈ {cfg.param_count() / 1e6:.0f}M")
+
+    from repro.launch import train as train_mod
+    argv = ["--arch", cfg.name, "--steps", str(args.steps),
+            "--batch", str(args.batch), "--seq", str(args.seq),
+            "--mesh", "1x1", "--fp32", "--log-every", "1"]
+    if args.ckpt_dir:
+        argv += ["--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100"]
+    sys.argv = ["train"] + argv
+    train_mod.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Analysis: roofline from compiled artifacts + the paper's accelerator model."""

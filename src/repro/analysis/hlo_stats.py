@@ -1,0 +1,121 @@
+"""Post-SPMD HLO statistics: collective bytes, op census.
+
+``cost_analysis()`` exposes FLOPs and HBM bytes but not collective
+traffic; we parse the optimized HLO (``compiled.as_text()``) and sum
+operand sizes of every collective, with wire-traffic factors:
+
+  all-reduce          2× result bytes   (ring reduce-scatter + all-gather)
+  all-gather          1× result bytes   (each device receives ≈result)
+  reduce-scatter      group_size× result bytes (operand = result × group)
+  all-to-all          1× result bytes
+  collective-permute  1× result bytes
+
+These are per-device wire-byte estimates for ring/bidirectional ICI —
+exactly the quantity the collective roofline term needs.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(line: str) -> int:
+    """Sum the result-shape bytes on an HLO instruction line (handles
+    tuple-shaped results like all-to-all with multiple operands)."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0
+    rhs = lhs[1]
+    opname_idx = rhs.find("(")
+    shape_part = rhs[:opname_idx] if opname_idx > 0 else rhs
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_part):
+        total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+@dataclass
+class CollectiveStats:
+    #: per-kind summed wire bytes (per device)
+    bytes_by_kind: dict = field(default_factory=dict)
+    counts: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    bytes_by_kind: dict = defaultdict(float)
+    counts: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if " = " not in stripped:
+            continue
+        kind = None
+        for c in _COLLECTIVES:
+            # match op name at the instruction position, not in metadata
+            if re.search(rf"\b{c}(-start|-done)?\(", stripped):
+                kind = c
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done(" in stripped:
+            continue  # avoid double counting start/done pairs
+        rb = _result_bytes(stripped)
+        if kind == "all-reduce":
+            wire = 2 * rb
+        elif kind == "reduce-scatter":
+            wire = rb * _group_size(stripped)
+        else:
+            wire = rb
+        bytes_by_kind[kind] += wire
+        counts[kind] += 1
+    return CollectiveStats(dict(bytes_by_kind), dict(counts))
+
+
+def op_census(hlo_text: str) -> dict:
+    """Instruction-kind histogram (diagnostics for §Perf iterations)."""
+    census: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s or s.startswith("//"):
+            continue
+        m = re.search(r"= [\w\[\],{}()]*?\s*([a-z][\w-]*)\(", s)
+        if m:
+            census[m.group(1)] += 1
+    return dict(census)

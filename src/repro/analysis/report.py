@@ -1,0 +1,118 @@
+"""Generate EXPERIMENTS.md sections from dry-run / roofline JSON records.
+
+  python -m repro.analysis.report            # prints §Dry-run + §Roofline
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..")
+DRYRUN = os.path.join(ROOT, "out", "dryrun")
+ROOFLINE = os.path.join(ROOT, "out", "dryrun_roofline", "single")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _load(dirpath):
+    recs = {}
+    for p in glob.glob(os.path.join(dirpath, "*.json")):
+        r = json.load(open(p))
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def _fmt_bytes(n):
+    if n is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def _fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}µs"
+
+
+def dryrun_table() -> str:
+    lines = [
+        "| arch | shape | mesh | chips | compile | params/chip | "
+        "args+temp (mem analysis) | HLO flops/chip | collective bytes/chip "
+        "(dominant kind) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for mesh in ("single", "multi"):
+        recs = _load(os.path.join(DRYRUN, mesh))
+        for (arch, shape) in sorted(recs, key=lambda t: (t[0],
+                                    SHAPE_ORDER.index(t[1]))):
+            r = recs[(arch, shape)]
+            if not r.get("ok"):
+                lines.append(f"| {arch} | {shape} | {mesh} | - | FAILED: "
+                             f"{r.get('error', '?')} | | | | |")
+                continue
+            mem = r.get("memory", {})
+            params_pc = r["params"] * 2 / r["chips"]
+            coll = r["collectives"]
+            top_kind = max(coll["bytes_by_kind"],
+                           key=coll["bytes_by_kind"].get) \
+                if coll["bytes_by_kind"] else "-"
+            lines.append(
+                f"| {arch} | {shape} | {mesh} | {r['chips']} | "
+                f"{r['compile_s']}s | {_fmt_bytes(params_pc)} | "
+                f"{_fmt_bytes(mem.get('argument_bytes'))}+"
+                f"{_fmt_bytes(mem.get('temp_bytes'))} | "
+                f"{r['cost']['flops']:.3g} | "
+                f"{_fmt_bytes(coll['total_bytes'])} ({top_kind}) |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    recs = _load(ROOFLINE)
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL_FLOPS/chip | useful ratio | roofline fraction |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape) in sorted(recs, key=lambda t: (t[0],
+                                SHAPE_ORDER.index(t[1]))):
+        r = recs[(arch, shape)]
+        if not r.get("ok"):
+            lines.append(f"| {arch} | {shape} | FAILED: "
+                         f"{r.get('error', '?')} | | | | | | |")
+            continue
+        rf = r["roofline"]
+        mark = "†" if r.get("ssm_corrected") else ""
+        lines.append(
+            f"| {arch}{mark} | {shape} | {_fmt_s(rf['compute_s'])} | "
+            f"{_fmt_s(rf['memory_s'])} | {_fmt_s(rf['collective_s'])} | "
+            f"**{rf['dominant']}** | {rf['model_flops_per_chip']:.3g} | "
+            f"{rf['useful_ratio']:.2f} | {rf['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def summarize() -> dict:
+    """Machine-readable summary for tests / hillclimb selection."""
+    recs = _load(ROOFLINE)
+    out = {}
+    for key, r in recs.items():
+        if r.get("ok"):
+            out[key] = r["roofline"]
+    return out
+
+
+def main():
+    print("## §Dry-run (all cells × both meshes)\n")
+    print(dryrun_table())
+    print("\n## §Roofline (single-pod, depth-extrapolated unrolled HLO)\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Roofline terms from the compiled dry-run artifact (TPU v5e targets).
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_wire_bytes_per_chip / ICI_bw
+
+``cost_analysis()`` on the SPMD-partitioned executable reports *per-chip*
+FLOPs/bytes; collective bytes come from :mod:`repro.analysis.hlo_stats`.
+MODEL_FLOPS (6·N·D train / 2·N·D inference, N = active params) anchors a
+usefulness ratio that exposes remat/dispatch overhead in the compiled
+compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW_PER_LINK = 50e9          # bytes/s/link (≈45-50 GB/s on v5e)
+ICI_LINKS = 4                   # 2D torus: 4 links usable per chip
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-chip quantities
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_per_chip: float
+    useful_ratio: float
+    #: roofline fraction: bound_term / achieved-time proxy (max of terms)
+    roofline_fraction: float
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: top_k + shared experts only)."""
+    if cfg.moe is None:
+        return cfg.param_count()
+    mo = cfg.moe
+    import dataclasses as dc
+    dense_equiv = dc.replace(
+        cfg,
+        moe=dc.replace(mo, n_experts=mo.top_k),
+    )
+    return dense_equiv.param_count()
+
+
+def model_flops(cfg: ModelConfig, *, tokens: int, train: bool) -> float:
+    """6·N·D (train) or 2·N·D (inference) with N = active params."""
+    n = active_param_count(cfg)
+    return (6.0 if train else 2.0) * n * tokens
+
+
+def roofline(
+    *, arch: str, shape: str, mesh: str, chips: int,
+    hlo_flops: float, hlo_bytes: float, collective_bytes: float,
+    tokens: int, train: bool, cfg: Optional[ModelConfig] = None,
+) -> RooflineReport:
+    compute_s = hlo_flops / PEAK_FLOPS_BF16
+    memory_s = hlo_bytes / HBM_BW
+    collective_s = collective_bytes / (ICI_BW_PER_LINK * ICI_LINKS)
+    terms = {
+        "compute": compute_s,
+        "memory": memory_s,
+        "collective": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, tokens=tokens, train=train) / chips if cfg else 0.0
+    useful = (mf / hlo_flops) if hlo_flops else 0.0
+    # roofline fraction: if perfectly overlapped, the step takes
+    # max(terms); the *useful-compute* roofline fraction is
+    # (model_flops / peak) / max(terms).
+    ideal_compute_s = mf / PEAK_FLOPS_BF16
+    frac = ideal_compute_s / max(terms.values()) if max(terms.values()) else 0.0
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes,
+        collective_bytes=collective_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops_per_chip=mf, useful_ratio=useful,
+        roofline_fraction=frac,
+    )

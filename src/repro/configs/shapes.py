@@ -1,0 +1,85 @@
+"""Assigned input-shape cells + ShapeDtypeStruct input specs.
+
+Every architecture is paired with four shape cells (40 cells total):
+
+  train_4k     seq 4,096   global_batch 256   → lowers ``train_step``
+  prefill_32k  seq 32,768  global_batch 32    → lowers ``prefill_step``
+  decode_32k   seq 32,768  global_batch 128   → lowers ``serve_step``
+                                                 (one token, 32k KV cache)
+  long_500k    seq 524,288 global_batch 1     → ``serve_step``; run only
+               for sub-quadratic archs (hymba, xlstm); the 8 full-attention
+               archs skip it (O(M) KV live footprint — DESIGN.md).
+
+``input_specs`` yields weak-type-correct ShapeDtypeStructs — no device
+allocation; the dry-run lowers against them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+#: archs with bounded-memory long-context decode (SSM / hybrid families)
+SUBQUADRATIC = ("hymba-1.5b", "xlstm-125m")
+
+
+def cell_applicable(cfg: ModelConfig, shape: str) -> bool:
+    if shape == "long_500k":
+        return cfg.name in SUBQUADRATIC or cfg.family in ("ssm", "hybrid")
+    return True
+
+
+def input_specs(cfg: ModelConfig, shape: str, *,
+                act_dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq_len
+    tok = jnp.int32
+    if cell.kind == "train":
+        if cfg.frontend == "tokens":
+            inputs = jax.ShapeDtypeStruct((b, s), tok)
+        else:
+            inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model), act_dtype)
+        specs = {
+            "inputs": inputs,
+            "targets": jax.ShapeDtypeStruct((b, s), tok),
+            "loss_mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+        }
+        if cfg.n_mtp:
+            specs["mtp_targets"] = jax.ShapeDtypeStruct((b, s, cfg.n_mtp), tok)
+        return specs
+    if cell.kind == "prefill":
+        if cfg.frontend == "tokens":
+            inputs = jax.ShapeDtypeStruct((b, s), tok)
+        else:
+            inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model), act_dtype)
+        return {"inputs": inputs}
+    # decode: one new token against a cache of seq_len slots
+    if cfg.frontend == "tokens":
+        inputs = jax.ShapeDtypeStruct((b, 1), tok)
+    else:
+        inputs = jax.ShapeDtypeStruct((b, 1, cfg.d_model), act_dtype)
+    return {
+        "inputs": inputs,
+        "kv_len": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }

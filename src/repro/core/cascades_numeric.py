@@ -1,0 +1,294 @@
+"""Numeric (JAX) implementations of the attention cascade taxonomy (§IV).
+
+Each function computes *exactly* the cascade of Einsums with the same name
+in :mod:`repro.core.taxonomy` — same intermediates, same reassociations —
+so that tests can assert (a) all variants are numerically equivalent and
+(b) the op-count / traffic claims of the paper (division deferral saves
+``M/F``× divisions; the 1-pass cascade never materializes an O(M)
+intermediate per fiber).
+
+Shapes follow the paper's rank names:
+
+    Q : [..., P, E]     (P = query positions, E = head dim)
+    K : [..., M, E]     (M = key positions / sequence length)
+    V : [..., M, F]     (F = value head dim)
+    out AV : [..., P, F]
+
+Masking (causal / sliding window) and logit softcap (Gemma-2) are folded in
+*before* the max/exp steps so that every cascade remains numerically stable
+and they all stay equivalent.  These are the hooks the assigned
+architectures need (§Arch-applicability in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-but-finite: keeps (x - max) well-defined when a
+                 # whole row is masked (decode with short prefixes).
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    """Options shared by every cascade implementation."""
+
+    causal: bool = False
+    #: sliding-window size (keys attend within [q - window + 1, q]); None=off
+    window: Optional[int] = None
+    #: Gemma-2 style logit soft-capping: cap * tanh(logits / cap); None=off
+    softcap: Optional[float] = None
+    #: 1/sqrt(E) scaling; paper §IV-C1 notes stable softmax makes it optional
+    scale: Optional[float] = None
+    #: absolute query-position offset (for decode: q position = offset + i)
+    q_offset: int = 0
+
+
+def _logit_mask(spec: AttnSpec, p: int, m: int, dtype) -> Optional[jnp.ndarray]:
+    """Additive mask [P, M] or None."""
+    if not spec.causal and spec.window is None:
+        return None
+    qpos = jnp.arange(p)[:, None] + spec.q_offset
+    kpos = jnp.arange(m)[None, :]
+    ok = jnp.ones((p, m), dtype=bool)
+    if spec.causal:
+        ok &= kpos <= qpos
+    if spec.window is not None:
+        ok &= kpos > qpos - spec.window
+    return jnp.where(ok, jnp.array(0.0, dtype), jnp.array(NEG_INF, dtype))
+
+
+def _qk(q: jnp.ndarray, k: jnp.ndarray, spec: AttnSpec) -> jnp.ndarray:
+    """Eq. 22 (+ masking/softcap): QK[m, p] — here laid out [..., P, M]."""
+    e = q.shape[-1]
+    scale = spec.scale if spec.scale is not None else 1.0 / (e ** 0.5)
+    logits = jnp.einsum("...pe,...me->...pm", q, k) * scale
+    if spec.softcap is not None:
+        logits = spec.softcap * jnp.tanh(logits / spec.softcap)
+    mask = _logit_mask(spec, q.shape[-2], k.shape[-2], logits.dtype)
+    if mask is not None:
+        logits = logits + mask
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# 3-pass cascade (Cascade 4) — PyTorch/TF/FLAT-style
+# ---------------------------------------------------------------------------
+
+def attention_3pass(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    spec: AttnSpec = AttnSpec(),
+    *,
+    deferred_division: bool = False,
+) -> jnp.ndarray:
+    """The straightforward numerically-stable cascade (Eqs. 33-36).
+
+    Pass 1: GM = max_m QK;  Pass 2: SN = exp(QK - GM), SD = Σ_m SN;
+    Pass 3: A = SN / SD, AV = Σ_m A·V.  With ``deferred_division`` (§IV-D)
+    the divide happens after the AV contraction (F·P instead of M·P
+    divisions) and the cascade becomes 2-pass.
+    """
+    qk = _qk(q, k, spec)                                     # [..., P, M]
+    gm = jnp.max(qk, axis=-1, keepdims=True)                 # Eq. 33
+    sn = jnp.exp(qk - gm)                                    # Eq. 34
+    sd = jnp.sum(sn, axis=-1, keepdims=True)                 # Eq. 35
+    if deferred_division:
+        snv = jnp.einsum("...pm,...mf->...pf", sn, v)        # Eq. 31
+        return snv / sd                                      # Eq. 32
+    a = sn / sd                                              # Eq. 36
+    return jnp.einsum("...pm,...mf->...pf", a, v)            # Eq. 24
+
+
+# ---------------------------------------------------------------------------
+# 2-pass cascade (§IV-E2) — TileFlow / Choi et al.-style
+# ---------------------------------------------------------------------------
+
+def attention_2pass(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    spec: AttnSpec = AttnSpec(),
+    *,
+    block: int = 128,
+    deferred_division: bool = True,
+) -> jnp.ndarray:
+    """Partition M → (M1, M0); pass 1 computes per-partition local max /
+    numerator / denominator (building the global max alongside); pass 2
+    corrects every partition with the global max and reduces."""
+    m = k.shape[-2]
+    m0 = min(block, m)
+    if m % m0:
+        raise ValueError(f"M={m} not divisible by block={m0}")
+    m1 = m // m0
+
+    qk = _qk(q, k, spec)                                     # [..., P, M]
+    bqk = qk.reshape(*qk.shape[:-1], m1, m0)                 # [..., P, M1, M0]
+    bv = v.reshape(*v.shape[:-2], m1, m0, v.shape[-1])       # [..., M1, M0, F]
+
+    # -- pass 1: local quantities -----------------------------------------
+    lm = jnp.max(bqk, axis=-1)                               # [..., P, M1]
+    sln = jnp.exp(bqk - lm[..., None])                       # local numerator
+    sld = jnp.sum(sln, axis=-1)                              # local denom
+    gm = jnp.max(lm, axis=-1, keepdims=True)                 # global max
+    # -- inter-pass bookkeeping over (M1, P): O(M/M0), not a pass ---------
+    cf = jnp.exp(lm - gm)                                    # correction
+    sd = jnp.sum(sld * cf, axis=-1, keepdims=True)           # global denom
+    # -- pass 2: correct and reduce ---------------------------------------
+    if deferred_division:
+        snv = jnp.einsum("...pnm,...nmf->...pf", sln * cf[..., None], bv)
+        return snv / sd
+    a = sln * cf[..., None] / sd[..., None]
+    return jnp.einsum("...pnm,...nmf->...pf", a, bv)
+
+
+# ---------------------------------------------------------------------------
+# 1-pass cascade (Cascade 5) — FlashAttention-2, adopted by FuseMax
+# ---------------------------------------------------------------------------
+
+def attention_1pass(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    spec: AttnSpec = AttnSpec(),
+    *,
+    block: int = 128,
+) -> jnp.ndarray:
+    """Iterative 1-pass cascade (Eqs. 37-54), via ``lax.scan`` over M1.
+
+    Per iteration m1 the running max / denominator / numerator-times-V are
+    corrected by ``PRM = exp(RM_old - RM_new)`` and accumulated; the single
+    division (deferred, Eq. 53) happens once at the end.  The carried state
+    is O(P·F) — independent of sequence length, the paper's headline
+    property.
+    """
+    m = k.shape[-2]
+    m0 = min(block, m)
+    if m % m0:
+        raise ValueError(f"M={m} not divisible by block={m0}")
+    m1 = m // m0
+    p = q.shape[-2]
+    f = v.shape[-1]
+    batch = q.shape[:-2]
+
+    e_dim = q.shape[-1]
+    scale = spec.scale if spec.scale is not None else 1.0 / (e_dim ** 0.5)
+    mask = _logit_mask(spec, p, m, q.dtype)                  # [P, M] or None
+
+    bk = k.reshape(*batch, m1, m0, k.shape[-1])              # Eq. 37
+    bv = v.reshape(*batch, m1, m0, f)                        # Eq. 38
+
+    rm0 = jnp.full((*batch, p), NEG_INF, q.dtype)            # Eq. 39
+    rd0 = jnp.zeros((*batch, p), q.dtype)                    # Eq. 40
+    rnv0 = jnp.zeros((*batch, p, f), q.dtype)                # Eq. 41
+
+    def step(carry, xs):
+        rm, rd, rnv = carry
+        bk_i, bv_i, mask_i = xs
+        bqk = jnp.einsum("...pe,...me->...pm", q, bk_i) * scale   # Eq. 42
+        if spec.softcap is not None:
+            bqk = spec.softcap * jnp.tanh(bqk / spec.softcap)
+        if mask_i is not None:
+            bqk = bqk + mask_i
+        lm = jnp.max(bqk, axis=-1)                                # Eq. 43
+        rm_new = jnp.maximum(rm, lm)                              # Eq. 44
+        sln = jnp.exp(bqk - rm_new[..., None])                    # Eq. 45
+        sld = jnp.sum(sln, axis=-1)                               # Eq. 46
+        slnv = jnp.einsum("...pm,...mf->...pf", sln, bv_i)        # Eq. 47
+        prm = jnp.exp(rm - rm_new)                                # Eq. 48
+        spd = rd * prm                                            # Eq. 49
+        rd_new = sld + spd                                        # Eq. 50
+        spnv = rnv * prm[..., None]                               # Eq. 51
+        rnv_new = slnv + spnv                                     # Eq. 52
+        return (rm_new, rd_new, rnv_new), None
+
+    # scan over the M1 axis: move it to the front of each scanned operand
+    bk_s = jnp.moveaxis(bk, -3, 0)
+    bv_s = jnp.moveaxis(bv, -3, 0)
+    if mask is not None:
+        mask_s = mask.reshape(p, m1, m0).transpose(1, 0, 2)  # [M1, P, M0]
+        xs = (bk_s, bv_s, mask_s)
+    else:
+        xs = (bk_s, bv_s, None)
+
+    if mask is None:
+        (rm, rd, rnv), _ = jax.lax.scan(
+            lambda c, x: step(c, (*x, None)), (rm0, rd0, rnv0), (bk_s, bv_s)
+        )
+    else:
+        (rm, rd, rnv), _ = jax.lax.scan(step, (rm0, rd0, rnv0), xs)
+
+    return rnv / rd[..., None]                                    # Eq. 53
+
+
+# ---------------------------------------------------------------------------
+# Decode-shaped attention: one new query against a long KV fiber
+# ---------------------------------------------------------------------------
+
+def attention_decode_1pass(
+    q: jnp.ndarray,        # [..., 1, E]
+    k: jnp.ndarray,        # [..., M, E]
+    v: jnp.ndarray,        # [..., M, F]
+    spec: AttnSpec = AttnSpec(),
+    *,
+    splits: int = 8,
+) -> jnp.ndarray:
+    """Split-K ("flash-decoding") evaluation of the 1-pass cascade.
+
+    The running-max algebra of Cascade 5 is associative: partial
+    (RM, RD, RNV) triples from disjoint M chunks combine exactly like one
+    more iteration.  We exploit that for decode, where P=1 gives no row
+    parallelism: evaluate per-split partials in parallel, then combine —
+    a two-level instantiation of the same cascade.
+    """
+    m = k.shape[-2]
+    if m % splits:
+        raise ValueError(f"M={m} not divisible by splits={splits}")
+    ms = m // splits
+    batch = q.shape[:-2]
+    f = v.shape[-1]
+
+    ks = k.reshape(*batch, splits, ms, k.shape[-1])
+    vs = v.reshape(*batch, splits, ms, f)
+
+    e_dim = q.shape[-1]
+    scale = spec.scale if spec.scale is not None else 1.0 / (e_dim ** 0.5)
+
+    logits = jnp.einsum("...pe,...sme->...spm", q, ks) * scale
+    if spec.softcap is not None:
+        logits = spec.softcap * jnp.tanh(logits / spec.softcap)
+    mask = _logit_mask(spec, q.shape[-2], m, q.dtype)
+    if mask is not None:
+        mask_s = mask.reshape(q.shape[-2], splits, ms)
+        logits = logits + jnp.moveaxis(mask_s, -2, -3)
+
+    lm = jnp.max(logits, axis=-1)                   # [..., S, P]
+    sln = jnp.exp(logits - lm[..., None])
+    sld = jnp.sum(sln, axis=-1)                     # [..., S, P]
+    slnv = jnp.einsum("...spm,...smf->...spf", sln, vs)
+
+    gm = jnp.max(lm, axis=-2, keepdims=True)        # combine: global max
+    cf = jnp.exp(lm - gm)                           # per-split correction
+    rd = jnp.sum(sld * cf, axis=-2)                 # [..., P]
+    rnv = jnp.sum(slnv * cf[..., None], axis=-3)    # [..., P, F]
+    return rnv / rd[..., None]
+
+
+def reference_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, spec: AttnSpec = AttnSpec()
+) -> jnp.ndarray:
+    """fp32 oracle: 3-pass cascade evaluated in float32."""
+    out = attention_3pass(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        spec,
+    )
+    return out.astype(q.dtype)
+
+
+def division_counts(m: int, p: int, f: int) -> dict[str, int]:
+    """§IV-D: divisions needed with/without deferral (M·P vs F·P)."""
+    return {"eager": m * p, "deferred": f * p, "savings_factor": m // max(f, 1)}

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (
+    DataConfig, FileSource, PrefetchIterator, SyntheticSource,
+)
+__all__ = ["DataConfig", "FileSource", "PrefetchIterator", "SyntheticSource"]

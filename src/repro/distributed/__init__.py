@@ -1,0 +1,3 @@
+"""Distribution substrate: sharding rules, checkpointing, fault tolerance."""
+from repro.distributed import checkpoint, fault_tolerance, sharding
+__all__ = ["checkpoint", "fault_tolerance", "sharding"]

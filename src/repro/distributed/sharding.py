@@ -1,0 +1,196 @@
+"""Logical-axis sharding rules: DP / FSDP / TP / EP / SP over named meshes.
+
+Models annotate every parameter with logical axis names (see
+``repro.model.layers``); this module maps those to mesh PartitionSpecs.
+Three rule sets cover the deployment envelope:
+
+  ``tp``        tensor-parallel params over "model", replicated over data —
+                right for ≤13B dense archs (params fit per-DP-replica).
+  ``fsdp_tp``   TP over "model" *plus* ZeRO-3-style parameter sharding of
+                the remaining large axis over ("pod","data") — required for
+                llama4-400B / deepseek-671B.
+  ``serve``     TP over "model", batch over ("pod","data") — inference.
+
+Activation rules shard batch over DP axes and heads/mlp/experts over
+"model" (sequence-parallel variants switch "seq" onto "model" between
+attention/MLP blocks — used by the long-context perf configs).
+
+Rules compose hierarchically for multi-pod meshes: the "pod" axis stacks
+onto the data axis everywhere (gradient all-reduce becomes hierarchical:
+reduce-scatter intra-pod over ICI, all-reduce across pods over DCN).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name → mesh axis (or tuple of mesh axes, or None)."""
+    rules: tuple
+
+    def lookup(self, name: Optional[str]):
+        for k, v in self.rules:
+            if k == name:
+                return v
+        return None
+
+
+def _data_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_rules(mesh: Mesh, mode: str = "tp",
+               seq_shard: bool = False) -> dict:
+    """Build (param_rules, act_rules) for a mesh + parallelism mode."""
+    dp = _data_axes(mesh)
+    if mode == "tp":
+        param = ShardingRules((
+            ("heads", "model"), ("kv_heads", "model"), ("mlp", "model"),
+            ("vocab", "model"), ("experts", "model"), ("inner", "model"),
+            ("embed", None), ("expert_mlp", None), ("layers", None),
+            ("latent", None), ("state", None), ("head_dim", None),
+        ))
+    elif mode == "fsdp_tp":
+        # TP over model; FSDP of the big remaining axis over the data axes.
+        param = ShardingRules((
+            ("heads", "model"), ("kv_heads", "model"), ("mlp", "model"),
+            ("vocab", "model"), ("experts", "model"), ("inner", "model"),
+            ("embed", dp), ("expert_mlp", dp), ("latent", dp),
+            ("layers", None), ("state", None), ("head_dim", None),
+        ))
+    elif mode == "serve":
+        param = ShardingRules((
+            ("heads", "model"), ("kv_heads", "model"), ("mlp", "model"),
+            ("vocab", "model"), ("experts", "model"), ("inner", "model"),
+            ("embed", None), ("expert_mlp", None), ("layers", None),
+            ("latent", None), ("state", None), ("head_dim", None),
+        ))
+    else:
+        raise ValueError(mode)
+    act = ShardingRules((
+        ("batch", dp),
+        ("seq", "model" if seq_shard else None),
+        ("heads", "model"), ("kv_heads", "model"),
+        ("mlp", "model"), ("expert_mlp", None),
+        ("experts", "model"), ("vocab", "model"),
+        ("embed", None), ("head_dim", None),
+    ))
+    return {"param": param, "act": act}
+
+
+def _spec_for(axes: Sequence, rules: ShardingRules, shape=None) -> P:
+    """Turn a logical-axes tuple into a PartitionSpec, dropping any mesh
+    axis already used (a mesh axis may appear at most once per array) and
+    any assignment that does not divide the dimension."""
+    used: set = set()
+    parts = []
+    for i, name in enumerate(axes):
+        v = rules.lookup(name)
+        if v is None:
+            parts.append(None)
+            continue
+        vt = (v,) if isinstance(v, str) else tuple(v)
+        vt = tuple(a for a in vt if a not in used)
+        if not vt:
+            parts.append(None)
+            continue
+        parts.append(vt if len(vt) > 1 else vt[0])
+        used.update(vt)
+    return P(*parts)
+
+
+def _divisible(shape, spec: P, mesh: Mesh) -> P:
+    """Drop assignments that do not divide the array dimension."""
+    parts = []
+    for dim, part in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if part is None:
+            parts.append(None)
+            continue
+        axes = (part,) if isinstance(part, str) else tuple(part)
+        total = int(np.prod([mesh.shape[a] for a in axes]))
+        parts.append(part if dim % total == 0 else None)
+    return P(*parts)
+
+
+def param_shardings(axes_tree, params_tree, mesh: Mesh, rules) -> Any:
+    """NamedShardings for a params pytree from its logical-axes pytree."""
+    pr = rules["param"]
+
+    def one(axes, leaf):
+        if axes is None:
+            return NamedSharding(mesh, P())
+        spec = _spec_for(axes, pr)
+        spec = _divisible(leaf.shape, spec, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(
+        one, axes_tree, params_tree,
+        is_leaf=lambda t: isinstance(t, tuple) or t is None)
+
+
+def act_sharder(mesh: Mesh, rules):
+    """Returns f(x, logical_axes) → with_sharding_constraint(x, spec)."""
+    ar = rules["act"]
+
+    def f(x, axes):
+        if axes is None or len(axes) != x.ndim:
+            return x
+        spec = _divisible(x.shape, _spec_for(axes, ar), mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return f
+
+
+def batch_shardings(batch_specs: dict, mesh: Mesh) -> dict:
+    """Shard batch inputs: leading (batch) dim over the DP axes."""
+    dp = _data_axes(mesh)
+    out = {}
+    for k, v in batch_specs.items():
+        spec = [None] * len(v.shape)
+        if len(v.shape) >= 1 and v.shape[0] % int(
+                np.prod([mesh.shape[a] for a in dp])) == 0:
+            spec[0] = dp if len(dp) > 1 else dp[0]
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def cache_shardings(cache_axes_tree, cache_tree, mesh: Mesh,
+                    seq_shard_fallback: bool = True) -> Any:
+    """NamedShardings for serving caches from their structural axes tree
+    (see ``repro.model.transformer.cache_axes``).
+
+    When the kv-head count does not divide the model axis (gemma2: 8 kv
+    heads on a 16-way TP axis), the cache would replicate 16×; instead the
+    *sequence-slot* dimension shards over "model" — decode then evaluates
+    as distributed split-K over the Cascade-5 associative combine (each
+    chip computes partial (RM, RD, RNV) over its KV shard; the correction
+    algebra of Eqs. 48-52 merges them with an O(B·H·G) collective).
+    """
+    ar = ShardingRules((
+        ("batch", _data_axes(mesh)),
+        ("kv_heads", "model"),
+        ("heads", "model"),
+        ("inner", "model"),
+        ("layers", None),
+    ))
+
+    def one(axes, leaf):
+        spec = _divisible(leaf.shape, _spec_for(axes, ar), mesh)
+        if (seq_shard_fallback and "kv_heads" in axes
+                and "model" not in jax.tree.leaves(tuple(spec))):
+            # kv_heads didn't shard → shard the slots dim (second-to-last)
+            slot_dim = len(axes) - 2
+            if leaf.shape[slot_dim] % mesh.shape["model"] == 0:
+                parts = list(tuple(spec) + (None,) * (leaf.ndim - len(spec)))
+                parts[slot_dim] = "model"
+                spec = P(*parts)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, cache_axes_tree, cache_tree,
+                        is_leaf=lambda t: isinstance(t, tuple) or t is None)

@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the FuseMax attention mapping.
+
+``fusemax.py``  — 1-pass fused attention (Cascade 5 → Mapping 1 on TPU)
+``decode.py``   — split-K decode instantiation (ragged KV caches)
+``ops.py``      — jit'd public wrappers (padding, GQA folding, dispatch,
+                  differentiable custom-VJP jnp path for training/dry-run)
+``ref.py``      — pure-jnp fp32 oracles
+"""
+from repro.kernels.fusemax import exp_maccs, fusemax_attention_pallas
+from repro.kernels.decode import fusemax_decode_pallas
+from repro.kernels.ops import fusemax_attention, fusemax_decode
+from repro.kernels.ref import decode_reference, mha_reference
+
+__all__ = [
+    "decode_reference",
+    "exp_maccs",
+    "fusemax_attention",
+    "fusemax_attention_pallas",
+    "fusemax_decode",
+    "fusemax_decode_pallas",
+    "mha_reference",
+]

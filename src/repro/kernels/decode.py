@@ -1,0 +1,190 @@
+"""FuseMax split-K decode kernel ("flash-decoding" over Cascade 5).
+
+Decode offers no query-row parallelism (P = 1 token per sequence), so the
+1-pass cascade is instantiated *twice*:
+
+  1. A Pallas kernel sweeps each of S disjoint M-chunks with the usual
+     running (RM, RD, RNV) state and emits per-chunk partials — the grid is
+     ``(B·Hkv, S, M2)``, S parallel, M2 sequential.
+  2. The partials combine with exactly the running-max algebra of Eqs.
+     48-52 (it is associative), done in jnp — O(S·G) work.
+
+Ragged KV lengths (each sequence in the batch has its own valid prefix of
+the cache) arrive via scalar prefetch (SMEM) and mask the tail chunks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.fusemax import LANES, NEG_INF, _exp
+
+
+def _decode_partials_kernel(
+    kv_len_ref,                     # SMEM scalar-prefetch: [B] int32
+    q_ref, k_ref, v_ref,
+    pm_ref, pl_ref, pnv_ref,        # partial outputs per (bh, s)
+    m_scratch, l_scratch, acc_scratch,
+    *,
+    scale: float,
+    softcap: Optional[float],
+    window: Optional[int],
+    group: int,
+    hkv: int,
+    block_k: int,
+    m2_total: int,
+    split_len: int,
+    exp_impl: str,
+):
+    bh = pl.program_id(0)
+    s = pl.program_id(1)
+    m2 = pl.program_id(2)
+
+    kv_len = kv_len_ref[bh // hkv]           # valid cache prefix for this seq
+    q_pos = kv_len - 1                       # the query is the newest token
+
+    @pl.when(m2 == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    k_lo = s * split_len + m2 * block_k
+    run = k_lo < kv_len
+    if window is not None:
+        run &= (k_lo + block_k - 1) > q_pos - window
+
+    @pl.when(run)
+    def _body():
+        g = q_ref.shape[1]
+        q_tile = q_ref[0].astype(jnp.float32)            # [G, E]
+        k_tile = k_ref[0, 0].astype(jnp.float32)         # [block_k, E]
+        v_tile = v_ref[0, 0].astype(jnp.float32)         # [block_k, F]
+
+        sc = jax.lax.dot_general(
+            q_tile, k_tile, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                        # [G, block_k]
+        if softcap is not None:
+            sc = softcap * jnp.tanh(sc / softcap)
+
+        cols = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+        kpos = k_lo + cols
+        ok = kpos < kv_len                               # ragged mask
+        if window is not None:
+            ok &= kpos > q_pos - window
+        sc = jnp.where(ok, sc, NEG_INF)
+
+        m_prev = m_scratch[:, :1]
+        lm = jnp.max(sc, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, lm)
+        p = _exp(sc - m_new, exp_impl)
+        sld = jnp.sum(p, axis=1, keepdims=True)
+        prm = _exp(m_prev - m_new, exp_impl)
+        l_scratch[...] = jnp.broadcast_to(
+            l_scratch[:, :1] * prm + sld, l_scratch.shape)
+        acc_scratch[...] = acc_scratch[...] * prm + jax.lax.dot_general(
+            p, v_tile, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scratch[...] = jnp.broadcast_to(m_new, m_scratch.shape)
+
+    @pl.when(m2 == m2_total - 1)
+    def _finish():
+        pm_ref[0, 0] = m_scratch[...].astype(pm_ref.dtype)
+        pl_ref[0, 0] = l_scratch[...].astype(pl_ref.dtype)
+        pnv_ref[0, 0] = acc_scratch[...].astype(pnv_ref.dtype)
+
+
+def fusemax_decode_pallas(
+    q: jnp.ndarray,        # [BHkv, G, E]  (G = q heads per kv head, padded ≥8)
+    k: jnp.ndarray,        # [BHkv, Mp, E]
+    v: jnp.ndarray,        # [BHkv, Mp, F]
+    kv_len: jnp.ndarray,   # [B] int32 valid lengths
+    *,
+    scale: float,
+    softcap: Optional[float] = None,
+    window: Optional[int] = None,
+    hkv: int,
+    splits: int = 8,
+    block_k: int = 256,
+    exp_impl: str = "native",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Split-K FuseMax decode. Returns [BHkv, G, F] (q.dtype)."""
+    bh, g, e = q.shape
+    _, mp, f = v.shape
+    if mp % splits:
+        raise ValueError(f"M={mp} not divisible by splits={splits}")
+    split_len = mp // splits
+    block_k = min(block_k, split_len)
+    if split_len % block_k:
+        raise ValueError(f"split_len={split_len} % block_k={block_k}")
+    m2 = split_len // block_k
+    grid = (bh, splits, m2)
+
+    kernel = functools.partial(
+        _decode_partials_kernel,
+        scale=scale,
+        softcap=softcap,
+        window=window,
+        group=1,
+        hkv=hkv,
+        block_k=block_k,
+        m2_total=m2,
+        split_len=split_len,
+        exp_impl=exp_impl,
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, e), lambda b, s, m2, *_: (b, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, e),
+                         lambda b, s, m2, *_: (b, s, m2, 0)),
+            pl.BlockSpec((1, 1, block_k, f),
+                         lambda b, s, m2, *_: (b, s, m2, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, LANES), lambda b, s, m2, *_: (b, s, 0, 0)),
+            pl.BlockSpec((1, 1, g, LANES), lambda b, s, m2, *_: (b, s, 0, 0)),
+            pl.BlockSpec((1, 1, g, f), lambda b, s, m2, *_: (b, s, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, LANES), jnp.float32),
+            pltpu.VMEM((g, LANES), jnp.float32),
+            pltpu.VMEM((g, f), jnp.float32),
+        ],
+    )
+
+    k4 = k.reshape(bh, splits, split_len, e)
+    v4 = v.reshape(bh, splits, split_len, f)
+    pm, pl_, pnv = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, splits, g, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((bh, splits, g, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((bh, splits, g, f), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q, k4, v4)
+
+    # -- combine partials (associative running-max algebra, Eqs. 48-52) ---
+    pm = pm[..., 0]                          # [BHkv, S, G]
+    pl_ = pl_[..., 0]
+    gm = jnp.max(pm, axis=1, keepdims=True)
+    cf = jnp.exp(pm - gm)                    # per-split correction factor
+    rd = jnp.sum(pl_ * cf, axis=1)           # [BHkv, G]
+    rnv = jnp.sum(pnv * cf[..., None], axis=1)
+    rd = jnp.where(rd == 0.0, 1.0, rd)
+    return (rnv / rd[..., None]).astype(q.dtype)

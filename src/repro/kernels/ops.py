@@ -1,0 +1,413 @@
+"""Public attention ops: jit'd wrappers around the FuseMax kernels.
+
+Entry points
+------------
+``fusemax_attention`` — [B, Hq, P, E] × [B, Hkv, M, E/F] → [B, Hq, P, F].
+  impl="pallas"  the Pallas TPU kernel (interpret=True on CPU),
+  impl="jnp"     a differentiable custom-VJP 1-pass implementation (the
+                 numeric Cascade 5 with FlashAttention-2-style recompute
+                 backward) — the training / dry-run path,
+  impl="ref"     the 3-pass oracle (testing),
+  impl="auto"    pallas on TPU, jnp elsewhere.
+
+``fusemax_decode`` — one-token queries against (ragged) KV caches with the
+  split-K instantiation of the cascade.
+
+All GQA head folding, block padding, and dtype promotion happen here so
+the kernels only ever see aligned shapes.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.decode import fusemax_decode_pallas
+from repro.kernels.fusemax import NEG_INF, fusemax_attention_pallas
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Differentiable 1-pass attention in jnp (custom VJP, FA-2-style backward)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _make_flash_jnp(
+    causal: bool,
+    window: Optional[int],
+    softcap: Optional[float],
+    scale: float,
+    q_offset: int,
+    block: int,
+    unroll: bool = False,
+):
+    """Build a custom-VJP flash attention over [B, Hkv, G, P, E] queries.
+
+    Forward: Cascade 5 via lax.scan over M1 blocks, carrying (RM, RD, RNV);
+    saves only (out, LSE) — O(P) residuals per fiber, independent of M.
+    Backward: one more pass over M blocks recomputing SLN from (Q, K, LSE),
+    the standard recompute backward that the 1-pass cascade enables.
+    """
+
+    def _mask(p: int, m_lo, m_len: int, dtype):
+        if not causal and window is None:
+            return None
+        qpos = jnp.arange(p)[:, None] + q_offset
+        kpos = m_lo + jnp.arange(m_len)[None, :]
+        ok = jnp.ones((p, m_len), dtype=bool)
+        if causal:
+            ok = ok & (kpos <= qpos)
+        if window is not None:
+            ok = ok & (kpos > qpos - window)
+        return jnp.where(ok, jnp.array(0.0, dtype), jnp.array(NEG_INF, dtype))
+
+    def _logits(q, k_blk, m_lo, m_len):
+        s = jnp.einsum("bhgpe,bhme->bhgpm", q, k_blk) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        msk = _mask(q.shape[-2], m_lo, m_len, s.dtype)
+        if msk is not None:
+            s = s + msk
+        return s
+
+    def fwd(q, k, v):
+        *bh, p, e = q.shape
+        m = k.shape[-2]
+        f = v.shape[-1]
+        n_blk = m // block
+        qf = q.astype(jnp.float32)
+        kb = jnp.moveaxis(
+            k.astype(jnp.float32).reshape(*k.shape[:-2], n_blk, block, e),
+            -3, 0)
+        vb = jnp.moveaxis(
+            v.astype(jnp.float32).reshape(*v.shape[:-2], n_blk, block, f),
+            -3, 0)
+        batch = q.shape[:-2]
+        rm0 = jnp.full((*batch, p), NEG_INF, jnp.float32)
+        rd0 = jnp.zeros((*batch, p), jnp.float32)
+        rnv0 = jnp.zeros((*batch, p, f), jnp.float32)
+
+        def step(carry, xs):
+            rm, rd, rnv = carry
+            i, k_i, v_i = xs
+            s = _logits(qf, k_i, i * block, block)          # Eq. 42
+            lm = jnp.max(s, axis=-1)                        # Eq. 43
+            rm_new = jnp.maximum(rm, lm)                    # Eq. 44
+            p_ = jnp.exp(s - rm_new[..., None])             # Eq. 45
+            sld = jnp.sum(p_, axis=-1)                      # Eq. 46
+            slnv = jnp.einsum("bhgpm,bhmf->bhgpf", p_, v_i) # Eq. 47
+            prm = jnp.exp(rm - rm_new)                      # Eq. 48
+            rd_new = rd * prm + sld                         # Eqs. 49-50
+            rnv_new = rnv * prm[..., None] + slnv           # Eqs. 51-52
+            return (rm_new, rd_new, rnv_new), None
+
+        idx = jnp.arange(n_blk)
+        (rm, rd, rnv), _ = jax.lax.scan(
+            step, (rm0, rd0, rnv0), (idx, kb, vb),
+            unroll=n_blk if unroll else 1)
+        rd_safe = jnp.where(rd == 0.0, 1.0, rd)
+        out = (rnv / rd_safe[..., None]).astype(q.dtype)    # Eq. 53
+        lse = rm + jnp.log(rd_safe)                         # logsumexp
+        return out, lse
+
+    def value(q, k, v):
+        return fwd(q, k, v)[0]
+
+    def fwd_vjp(q, k, v):
+        out, lse = fwd(q, k, v)
+        return out, (q, k, v, out, lse)
+
+    def bwd_vjp(res, dout):
+        q, k, v, out, lse = res
+        *_, p, e = q.shape
+        m = k.shape[-2]
+        f = v.shape[-1]
+        n_blk = m // block
+        qf = q.astype(jnp.float32)
+        do = dout.astype(jnp.float32)
+        # D_p = Σ_f dO ∘ O  (rowsum)
+        delta = jnp.sum(do * out.astype(jnp.float32), axis=-1)  # [...,P]
+
+        kb = jnp.moveaxis(
+            k.astype(jnp.float32).reshape(*k.shape[:-2], n_blk, block, e),
+            -3, 0)
+        vb = jnp.moveaxis(
+            v.astype(jnp.float32).reshape(*v.shape[:-2], n_blk, block, f),
+            -3, 0)
+
+        def step(dq, xs):
+            i, k_i, v_i = xs
+            s_raw = jnp.einsum("bhgpe,bhme->bhgpm", qf, k_i) * scale
+            if softcap is not None:
+                t = jnp.tanh(s_raw / softcap)
+                s_c = softcap * t
+            else:
+                s_c = s_raw
+            msk = _mask(p, i * block, block, s_c.dtype)
+            if msk is not None:
+                s_c = s_c + msk
+            p_ = jnp.exp(s_c - lse[..., None])              # = A (recompute)
+            dv_i = jnp.einsum("bhgpm,bhgpf->bhmf", p_, do)
+            dp = jnp.einsum("bhgpf,bhmf->bhgpm", do, v_i)
+            ds = p_ * (dp - delta[..., None])
+            if softcap is not None:
+                ds = ds * (1.0 - t * t)                     # d softcap
+            dq = dq + jnp.einsum("bhgpm,bhme->bhgpe", ds, k_i) * scale
+            dk_i = jnp.einsum("bhgpm,bhgpe->bhme", ds, qf) * scale
+            return dq, (dk_i, dv_i)
+
+        idx = jnp.arange(n_blk)
+        dq0 = jnp.zeros_like(qf)
+        dq, (dk_b, dv_b) = jax.lax.scan(step, dq0, (idx, kb, vb),
+                                        unroll=n_blk if unroll else 1)
+        dk = jnp.moveaxis(dk_b, 0, -3).reshape(k.shape)
+        dv = jnp.moveaxis(dv_b, 0, -3).reshape(v.shape)
+        return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+    flash = jax.custom_vjp(value)
+    flash.defvjp(fwd_vjp, bwd_vjp)
+    return flash
+
+
+def _banded_window_jnp(q5, k, v, window, softcap, scale, block_k,
+                       unroll=False):
+    """Sliding-window attention as per-chunk bands.
+
+    Queries are split into S/W chunks; chunk c ≥ 1 attends only the 2W-key
+    band [(c-1)W, (c+1)W) (fold chunks into the batch dim and reuse the
+    1-pass flash with q_offset=W — the causal+window mask inside the band
+    is chunk-independent); chunk 0 attends its own W keys.  Exact, and
+    drops sliding-window score work from O(S²) to O(S·2W).
+    """
+    b, h, g, s, e = q5.shape
+    f = v.shape[-1]
+    w = window
+    nc = s // w
+
+    # chunk 0: plain causal(+window) over its own keys
+    flash0 = _make_flash_jnp(True, w, softcap, scale, 0, min(block_k, w),
+                             unroll)
+    out0 = flash0(q5[:, :, :, :w], k[:, :, :w], v[:, :, :w])
+
+    # chunks 1..nc-1: uniform band geometry, folded into batch
+    kc = k.reshape(b, h, nc, w, e)
+    vc = v.reshape(b, h, nc, w, f)
+    band_k = jnp.concatenate([kc[:, :, :-1], kc[:, :, 1:]], axis=3)
+    band_v = jnp.concatenate([vc[:, :, :-1], vc[:, :, 1:]], axis=3)
+    qc = q5.reshape(b, h, g, nc, w, e)[:, :, :, 1:]          # [b,h,g,nc-1,w,e]
+
+    fold = nc - 1
+    qb = (qc.transpose(0, 3, 1, 2, 4, 5)
+          .reshape(b * fold, h, g, w, e))
+    kb = (band_k.transpose(0, 2, 1, 3, 4)
+          .reshape(b * fold, h, 2 * w, e))
+    vb = (band_v.transpose(0, 2, 1, 3, 4)
+          .reshape(b * fold, h, 2 * w, f))
+    flash = _make_flash_jnp(True, w, softcap, scale, w,
+                            min(block_k, 2 * w), unroll)
+    ob = flash(qb, kb, vb)                                   # [b·nc-1,h,g,w,f]
+    ob = (ob.reshape(b, fold, h, g, w, f)
+          .transpose(0, 2, 3, 1, 4, 5)
+          .reshape(b, h, g, (nc - 1) * w, f))
+    return jnp.concatenate([out0, ob], axis=3)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def fusemax_attention(
+    q: jnp.ndarray,   # [B, Hq, P, E]
+    k: jnp.ndarray,   # [B, Hkv, M, E]
+    v: jnp.ndarray,   # [B, Hkv, M, F]
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    impl: str = "auto",
+    block_q: int = 128,
+    block_k: int = 128,
+    exp_impl: str = "native",
+    interpret: Optional[bool] = None,
+    unroll_scan: bool = False,
+) -> jnp.ndarray:
+    """FuseMax attention (1-pass cascade, deferred division)."""
+    b, hq, p, e = q.shape
+    _, hkv, m, f = v.shape
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not a multiple of Hkv={hkv}")
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (e ** 0.5)
+
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+
+    if impl == "ref":
+        return _ref.mha_reference(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, q_offset=q_offset)
+
+    if impl == "jnp":
+        # fold heads: [B, Hkv, G, P, E]
+        q5 = q.reshape(b, hkv, group, p, e)
+        if (window is not None and causal and q_offset == 0 and p == m
+                and m % window == 0 and m // window >= 2
+                and os.environ.get("REPRO_NO_BANDING") != "1"):
+            # banded evaluation for sliding-window layers: each W-chunk of
+            # queries touches only its 2W-key band ⇒ score work S·2W
+            # instead of S² (§Perf lever; exact — masks unchanged)
+            out = _banded_window_jnp(q5, k, v, window, softcap, scale,
+                                     block_k, unroll_scan)
+            return out.reshape(b, hq, p, f)
+        mb = min(block_k, m)
+        if m % mb:
+            mb = m  # irregular tail: single block
+        flash = _make_flash_jnp(causal, window, softcap, scale, q_offset, mb,
+                                unroll_scan)
+        out = flash(q5, k, v)
+        return out.reshape(b, hq, p, f)
+
+    if impl != "pallas":
+        raise ValueError(f"unknown impl: {impl}")
+
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    # fold GQA groups into query rows: row r = p·group + g → qpos = r//group
+    q_f = (
+        q.reshape(b, hkv, group, p, e)
+        .transpose(0, 1, 3, 2, 4)
+        .reshape(b * hkv, p * group, e)
+    )
+    k_f = k.reshape(b * hkv, m, e)
+    v_f = v.reshape(b * hkv, m, f)
+
+    pg = p * group
+    block_q = min(block_q, _round_up(pg, 8))
+    block_k_eff = min(block_k, _round_up(m, 128))
+    pg_pad = _round_up(pg, block_q)
+    m_pad = _round_up(m, block_k_eff)
+    if pg_pad != pg:
+        q_f = jnp.pad(q_f, ((0, 0), (0, pg_pad - pg), (0, 0)))
+    if m_pad != m:
+        k_f = jnp.pad(k_f, ((0, 0), (0, m_pad - m), (0, 0)))
+        v_f = jnp.pad(v_f, ((0, 0), (0, m_pad - m), (0, 0)))
+
+    out = fusemax_attention_pallas(
+        q_f, k_f, v_f,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        q_offset=q_offset, group=group,
+        block_q=block_q, block_k=block_k_eff,
+        m_valid=m, p_valid=pg, exp_impl=exp_impl, interpret=interpret,
+    )
+    out = out[:, :pg]
+    return (
+        out.reshape(b, hkv, p, group, f)
+        .transpose(0, 1, 3, 2, 4)
+        .reshape(b, hq, p, f)
+    )
+
+
+def _decode_splitk_jnp(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    kv_len: jnp.ndarray,
+    *, scale: float, softcap: Optional[float], window: Optional[int],
+    splits: int,
+) -> jnp.ndarray:
+    """jnp split-K decode over ragged caches (mirrors the Pallas kernel)."""
+    b, hq, p, e = q.shape
+    _, hkv, m, f = v.shape
+    group = hq // hkv
+    ms = m // splits
+    q5 = q.astype(jnp.float32).reshape(b, hkv, group, e)   # P == 1 squeezed
+    ks = k.astype(jnp.float32).reshape(b, hkv, splits, ms, e)
+    vs = v.astype(jnp.float32).reshape(b, hkv, splits, ms, f)
+
+    logits = jnp.einsum("bhge,bhsme->bhsgm", q5, ks) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    kpos = (jnp.arange(splits)[:, None] * ms + jnp.arange(ms)[None, :])
+    ok = kpos[None] < kv_len[:, None, None]                # [B, S, Ms]
+    if window is not None:
+        qpos = kv_len[:, None, None] - 1
+        ok &= kpos[None] > qpos - window
+    logits = jnp.where(ok[:, None, :, None, :], logits, NEG_INF)
+
+    lm = jnp.max(logits, axis=-1)                          # [b,h,s,g]
+    sln = jnp.exp(logits - lm[..., None])
+    sld = jnp.sum(sln, axis=-1)
+    slnv = jnp.einsum("bhsgm,bhsmf->bhsgf", sln, vs)
+    gm = jnp.max(lm, axis=2, keepdims=True)
+    cf = jnp.exp(lm - gm)
+    rd = jnp.sum(sld * cf, axis=2)                         # [b,h,g]
+    rnv = jnp.sum(slnv * cf[..., None], axis=2)
+    rd = jnp.where(rd == 0.0, 1.0, rd)
+    out = rnv / rd[..., None]
+    return out.reshape(b, hq, 1, f).astype(q.dtype)
+
+
+def fusemax_decode(
+    q: jnp.ndarray,         # [B, Hq, 1, E]
+    k: jnp.ndarray,         # [B, Hkv, M, E]  (cache, padded to M slots)
+    v: jnp.ndarray,         # [B, Hkv, M, F]
+    kv_len: jnp.ndarray,    # [B] valid lengths (the query is token kv_len-1)
+    *,
+    softcap: Optional[float] = None,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    impl: str = "auto",
+    splits: int = 8,
+    block_k: int = 256,
+    exp_impl: str = "native",
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Single-token decode against a ragged KV cache (split-K FuseMax)."""
+    b, hq, p, e = q.shape
+    _, hkv, m, f = v.shape
+    if p != 1:
+        raise ValueError("decode expects exactly one query token")
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (e ** 0.5)
+    splits = max(1, min(splits, m // min(m, block_k)))
+    while m % splits:
+        splits -= 1
+
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "ref":
+        return _ref.decode_reference(
+            q, k, v, kv_len, softcap=softcap, window=window, scale=scale)
+    if impl == "jnp":
+        return _decode_splitk_jnp(
+            q, k, v, kv_len, scale=scale, softcap=softcap, window=window,
+            splits=splits)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl: {impl}")
+
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    g_pad = max(8, _round_up(group, 8))
+    q_f = q.reshape(b, hkv, group, e).reshape(b * hkv, group, e)
+    if g_pad != group:
+        q_f = jnp.pad(q_f, ((0, 0), (0, g_pad - group), (0, 0)))
+    out = fusemax_decode_pallas(
+        q_f,
+        k.reshape(b * hkv, m, e),
+        v.reshape(b * hkv, m, f),
+        kv_len,
+        scale=scale, softcap=softcap, window=window, hkv=hkv,
+        splits=splits, block_k=block_k, exp_impl=exp_impl,
+        interpret=interpret,
+    )
+    out = out[:, :group]                                  # [B·Hkv, G, F]
+    return out.reshape(b, hkv, group, f).reshape(b, hq, 1, f)

@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for the FuseMax kernels.
+
+The reference is the 3-pass numerically-stable cascade (Cascade 4) in
+float32, evaluated with multi-head/GQA batching — the semantics every
+kernel must match (``assert_allclose`` in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_reference(
+    q: jnp.ndarray,   # [B, Hq, P, E]
+    k: jnp.ndarray,   # [B, Hkv, M, E]
+    v: jnp.ndarray,   # [B, Hkv, M, F]
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Grouped-query attention oracle. Returns [B, Hq, P, F] in q.dtype."""
+    b, hq, p, e = q.shape
+    _, hkv, m, f = v.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+
+    qf = q.astype(jnp.float32).reshape(b, hkv, group, p, e)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = scale if scale is not None else 1.0 / (e ** 0.5)
+
+    logits = jnp.einsum("bhgpe,bhme->bhgpm", qf, kf) * s
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    qpos = jnp.arange(p)[:, None] + q_offset
+    kpos = jnp.arange(m)[None, :]
+    ok = jnp.ones((p, m), dtype=bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    logits = jnp.where(ok[None, None, None], logits, NEG_INF)
+
+    gm = jnp.max(logits, axis=-1, keepdims=True)          # Eq. 33
+    sn = jnp.exp(logits - gm)                             # Eq. 34
+    sd = jnp.sum(sn, axis=-1, keepdims=True)              # Eq. 35
+    a = sn / sd                                           # Eq. 36
+    out = jnp.einsum("bhgpm,bhmf->bhgpf", a, vf)          # Eq. 24
+    return out.reshape(b, hq, p, f).astype(q.dtype)
+
+
+def decode_reference(
+    q: jnp.ndarray,        # [B, Hq, 1, E]
+    k: jnp.ndarray,        # [B, Hkv, M, E]
+    v: jnp.ndarray,        # [B, Hkv, M, F]
+    kv_len: Optional[jnp.ndarray] = None,  # [B] valid KV lengths
+    **kwargs,
+) -> jnp.ndarray:
+    """Decode-shape oracle: one query vs. a (possibly ragged) KV fiber."""
+    if kv_len is None:
+        return mha_reference(q, k, v, **kwargs)
+    m = k.shape[-2]
+    # mask out cache slots beyond each sequence's valid length
+    valid = jnp.arange(m)[None, :] < kv_len[:, None]      # [B, M]
+    window = kwargs.get("window")
+    if window is not None:
+        # the query is the newest token: position kv_len - 1 (per batch)
+        qpos = kv_len[:, None] - 1
+        valid &= jnp.arange(m)[None, :] > qpos - window
+    km = jnp.where(valid[:, None, :, None], k, 0)
+    big_neg = jnp.where(valid, 0.0, NEG_INF)              # additive [B, M]
+    b, hq, p, e = q.shape
+    _, hkv, _, f = v.shape
+    group = hq // hkv
+    s = kwargs.get("scale") or 1.0 / (e ** 0.5)
+    logits = jnp.einsum(
+        "bhgpe,bhme->bhgpm",
+        q.astype(jnp.float32).reshape(b, hkv, group, p, e),
+        km.astype(jnp.float32),
+    ) * s
+    softcap = kwargs.get("softcap")
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = logits + big_neg[:, None, None, None, :]
+    gm = jnp.max(logits, axis=-1, keepdims=True)
+    sn = jnp.exp(logits - gm)
+    a = sn / jnp.sum(sn, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgpm,bhmf->bhgpf", a, v.astype(jnp.float32))
+    return out.reshape(b, hq, p, f).astype(q.dtype)

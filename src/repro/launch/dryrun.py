@@ -1,0 +1,336 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds the production mesh (16×16 single-pod or
+2×16×16 multi-pod), constructs abstract (ShapeDtypeStruct) model/optimizer
+state and inputs, jits the appropriate step with explicit in/out
+shardings, ``.lower().compile()``s it, and records:
+
+  * ``memory_analysis()``  — per-chip argument/output/temp bytes (fits?)
+  * ``cost_analysis()``    — per-chip FLOPs + HBM bytes
+  * collective wire bytes  — parsed from the SPMD-partitioned HLO
+  * roofline terms         — repro.analysis.roofline (TPU v5e constants)
+
+Results land in ``out/dryrun/<mesh>/<arch>__<shape>.json`` (resumable;
+EXPERIMENTS.md §Dry-run / §Roofline are generated from these).
+
+Usage:
+  python -m repro.launch.dryrun                        # all cells, both meshes
+  python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --list
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo_stats import collective_stats
+from repro.analysis.roofline import model_flops, roofline
+from repro.configs import (
+    ARCHS, SHAPES, cell_applicable, get_config, input_specs,
+)
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.model import transformer as tf
+from repro.model.layers import Runtime
+from repro.optim import make_optimizer
+from repro.training.train_step import TrainState, make_train_step
+from repro.optim.schedule import warmup_cosine
+
+OUT_DIR = os.environ.get(
+    "REPRO_DRYRUN_OUT",
+    os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                 "out", "dryrun"))
+
+
+# ---------------------------------------------------------------------------
+# Abstract state construction (no device allocation, ever)
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg, rt: Runtime):
+    captured = {}
+
+    def build(key):
+        p, a = tf.init(cfg, key, rt)
+        captured["axes"] = a
+        return p
+
+    structs = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return structs, captured["axes"]
+
+
+def opt_state_axes(opt_state_struct, param_axes):
+    """Logical axes for optimizer state leaves (mirror params; factored
+    Adafactor stats drop the last / second-to-last axis)."""
+    def for_stats(st, axes):
+        if "vr" in st:
+            return {"vr": tuple(axes[:-1]), "vc": tuple(axes[:-2]) + (axes[-1],)}
+        return {"v": tuple(axes)}
+
+    out: dict = {}
+    if "m" in opt_state_struct:                       # AdamW
+        out["m"] = param_axes
+        out["v"] = param_axes
+    if "stats" in opt_state_struct:                   # Adafactor
+        out["stats"] = jax.tree.map(
+            for_stats, opt_state_struct["stats"], param_axes,
+            is_leaf=lambda t: isinstance(t, dict) and ("v" in t or "vr" in t))
+    out["count"] = None
+    return out
+
+
+def state_shardings(state_struct: TrainState, param_axes, mesh, rules):
+    p_sh = shd.param_shardings(param_axes, state_struct.params, mesh, rules)
+    o_axes = opt_state_axes(state_struct.opt_state, param_axes)
+    o_sh = shd.param_shardings(o_axes, state_struct.opt_state, mesh, rules)
+    rep = NamedSharding(mesh, P())
+    ef = None if state_struct.ef_residual is None else p_sh
+    return TrainState(params=p_sh, opt_state=o_sh, step=rep, ef_residual=ef)
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+def lower_cell(arch: str, shape: str, multi_pod: bool,
+               *, seq_shard: bool = False, microbatches: int = 1,
+               unroll: bool = True, grad_accum_dtype="float32",
+               shard_grads: bool = False, cache_seq_shard: bool = True,
+               decode_splits: int = 8,
+               mode_override: Optional[str] = None) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    train = cell.kind == "train"
+
+    mode = mode_override or ("fsdp_tp" if train else "serve")
+    rules = shd.make_rules(mesh, mode, seq_shard=seq_shard)
+    rt = Runtime(
+        attn_impl="jnp",
+        param_dtype=jnp.bfloat16,
+        activation_dtype=jnp.bfloat16,
+        shard_activation=shd.act_sharder(mesh, rules),
+        unroll_runs=unroll,
+        decode_splits=decode_splits,
+        # large flash blocks bound the unrolled block count (flops/bytes
+        # are block-size independent; compile time is not)
+        block_k=2048 if unroll else 128,
+    )
+
+    params_struct, param_axes = abstract_params(cfg, rt)
+    specs = input_specs(cfg, shape)
+    record: dict[str, Any] = {
+        "arch": arch, "shape": shape,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": chips, "mode": mode, "kind": cell.kind,
+        "params": int(sum(x.size for x in jax.tree.leaves(params_struct))),
+    }
+
+    t0 = time.time()
+    with mesh:
+        if train:
+            opt = make_optimizer(cfg.default_optimizer)
+            state_struct = TrainState(
+                params=params_struct,
+                opt_state=jax.eval_shape(opt.init, params_struct),
+                step=jax.ShapeDtypeStruct((), jnp.int32),
+                ef_residual=None,
+            )
+            st_sh = state_shardings(state_struct, param_axes, mesh, rules)
+            b_sh = shd.batch_shardings(specs, mesh)
+            step = make_train_step(
+                cfg, opt, warmup_cosine(3e-4, 100, 10000), rt,
+                microbatches=microbatches,
+                grad_accum_dtype=jnp.dtype(grad_accum_dtype),
+                grad_shardings=(st_sh.params if shard_grads else None))
+            jitted = jax.jit(
+                step,
+                in_shardings=(st_sh, b_sh),
+                out_shardings=(st_sh, None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_struct, specs)
+            tokens = cell.global_batch * cell.seq_len
+        elif cell.kind == "prefill":
+            p_sh = shd.param_shardings(param_axes, params_struct, mesh,
+                                       rules)
+            caches_struct = jax.eval_shape(
+                lambda: tf.init_cache(cfg, cell.global_batch, cell.seq_len,
+                                      jnp.bfloat16))
+            c_sh = shd.cache_shardings(tf.cache_axes(cfg), caches_struct,
+                                       mesh)
+            b_sh = shd.batch_shardings(specs, mesh)
+
+            def prefill_step(params, inputs, caches):
+                return tf.prefill(cfg, params, {"inputs": inputs}, caches,
+                                  rt)
+
+            jitted = jax.jit(
+                prefill_step,
+                in_shardings=(p_sh, b_sh["inputs"], c_sh),
+                out_shardings=(None, c_sh),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params_struct, specs["inputs"],
+                                   caches_struct)
+            tokens = cell.global_batch * cell.seq_len
+        else:  # decode
+            p_sh = shd.param_shardings(param_axes, params_struct, mesh,
+                                       rules)
+            caches_struct = jax.eval_shape(
+                lambda: tf.init_cache(cfg, cell.global_batch, cell.seq_len,
+                                      jnp.bfloat16))
+            c_sh = shd.cache_shardings(tf.cache_axes(cfg), caches_struct,
+                                       mesh,
+                                       seq_shard_fallback=cache_seq_shard)
+            b_sh = shd.batch_shardings(specs, mesh)
+
+            def serve_step(params, inputs, caches, kv_len):
+                return tf.decode_step(cfg, params, inputs, caches, kv_len,
+                                      rt)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(p_sh, b_sh["inputs"], c_sh, b_sh["kv_len"]),
+                out_shardings=(None, c_sh),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params_struct, specs["inputs"],
+                                   caches_struct, specs["kv_len"])
+            tokens = cell.global_batch  # one token per sequence
+
+        record["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 2)
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            record["memory"] = {
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "alias_bytes": int(mem.alias_size_in_bytes),
+                "peak_bytes_est": int(mem.argument_size_in_bytes
+                                      + mem.output_size_in_bytes
+                                      + mem.temp_size_in_bytes
+                                      - mem.alias_size_in_bytes),
+            }
+        ca = compiled.cost_analysis() or {}
+        flops = float(ca.get("flops", 0.0))
+        bts = float(ca.get("bytes accessed", 0.0))
+        hlo = compiled.as_text()
+        cs = collective_stats(hlo)
+        record["cost"] = {"flops": flops, "bytes_accessed": bts}
+        record["collectives"] = {
+            "bytes_by_kind": cs.bytes_by_kind,
+            "counts": cs.counts,
+            "total_bytes": cs.total_bytes,
+        }
+        rep = roofline(
+            arch=arch, shape=shape,
+            mesh=record["mesh"], chips=chips,
+            hlo_flops=flops, hlo_bytes=bts,
+            collective_bytes=cs.total_bytes,
+            tokens=tokens, train=train, cfg=cfg,
+        )
+        record["roofline"] = rep.to_dict()
+        record["ok"] = True
+    return record
+
+
+# ---------------------------------------------------------------------------
+# CLI driver
+# ---------------------------------------------------------------------------
+
+def all_cells():
+    for arch, cfg in ARCHS.items():
+        for shape in SHAPES:
+            if cell_applicable(cfg, shape):
+                yield arch, shape
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, force: bool,
+             **kw) -> dict:
+    out_dir = os.path.join(OUT_DIR, mesh_name)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            rec = json.load(f)
+        print(f"[skip] {mesh_name}/{arch}/{shape} (cached ok={rec.get('ok')})")
+        return rec
+    print(f"[run ] {mesh_name}/{arch}/{shape} ...", flush=True)
+    try:
+        rec = lower_cell(arch, shape, multi_pod=(mesh_name == "multi"), **kw)
+    except Exception as e:
+        rec = {
+            "arch": arch, "shape": shape, "mesh": mesh_name, "ok": False,
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-2000:],
+        }
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "ok" if rec.get("ok") else "FAIL"
+    extra = ""
+    if rec.get("ok"):
+        r = rec["roofline"]
+        extra = (f" dominant={r['dominant']}"
+                 f" frac={r['roofline_fraction']:.2f}"
+                 f" compile={rec['compile_s']}s")
+    print(f"[{status:4s}] {mesh_name}/{arch}/{shape}{extra}", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="keep lax.scan over layers (faster compile; "
+                         "cost_analysis FLOPs undercount loop trips)")
+    ap.add_argument("--grad-accum-dtype", default="float32")
+    ap.add_argument("--shard-grads", action="store_true")
+    args = ap.parse_args()
+
+    cells = [(a, s) for a, s in all_cells()
+             if (args.arch in (None, a)) and (args.shape in (None, s))]
+    if args.list:
+        for a, s in cells:
+            print(f"{a:28s} {s}")
+        print(f"{len(cells)} applicable cells")
+        return
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    n_fail = 0
+    for mesh_name in meshes:
+        for arch, shape in cells:
+            rec = run_cell(arch, shape, mesh_name, args.force,
+                           seq_shard=args.seq_shard,
+                           microbatches=args.microbatches,
+                           grad_accum_dtype=args.grad_accum_dtype,
+                           shard_grads=args.shard_grads,
+                           unroll=not args.no_unroll)
+            n_fail += 0 if rec.get("ok") else 1
+    print(f"done; {n_fail} failures")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: measure the three optimization levers.
+
+Cells (chosen per the §Perf selection rule):
+  1. gemma2-9b / prefill_32k   — most representative of the paper's
+     technique (32k-token attention, local/global alternation, softcaps).
+     Lever: banded evaluation of sliding-window layers (score work S·2W
+     instead of S²) — the TPU analogue of the paper's fusion-granularity
+     reasoning.
+  2. deepseek-v3-671b / train_4k — most collective-bound cell.
+     Lever: pin the gradient-accumulation carry to the parameter sharding
+     (ZeRO grad sharding) so per-microbatch gradient sync lowers to
+     reduce-scatter instead of all-reduce.
+  3. gemma2-9b / decode_32k    — worst roofline fraction (memory-bound;
+     KV cache replicated 16× across the TP axis because kv_heads=8 does
+     not divide model=16).  Lever: sequence-shard the KV cache and decode
+     as distributed split-K over the Cascade-5 associative combine.
+
+Each lever writes before/after records to out/hillclimb/<name>.json.
+"""
+import json
+
+from repro.launch import dryrun as dr
+from repro.launch import roofline_pass as rp
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "out", "hillclimb")
+
+
+def record(name, rec):
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, f"{name}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    if rec.get("ok"):
+        c = rec.get("collectives", {})
+        m = rec.get("memory", {})
+        q = rec.get("cost", rec.get("quantities", {}))
+        print(f"[{name}] flops={q.get('flops', 0):.4g} "
+              f"bytes={q.get('bytes_accessed', q.get('bytes', 0)):.4g} "
+              f"coll={c.get('total_bytes', 0):.4g} "
+              f"arg={m.get('argument_bytes', 0) / 2**30:.1f}Gi "
+              f"temp={m.get('temp_bytes', 0) / 2**30:.1f}Gi", flush=True)
+    else:
+        print(f"[{name}] FAIL {rec.get('error')}", flush=True)
+    return rec
+
+
+def lever1_banded_prefill():
+    os.environ["REPRO_NO_BANDING"] = "1"
+    try:
+        rec = rp.run_cell("gemma2-9b", "prefill_32k", force=True)
+        record("gemma2_prefill32k__before", rec)
+    finally:
+        del os.environ["REPRO_NO_BANDING"]
+    rec = rp.run_cell("gemma2-9b", "prefill_32k", force=True)
+    record("gemma2_prefill32k__after_banded", rec)
+
+
+def lever2b_bf16_grad_accum():
+    after = dr.lower_cell("deepseek-v3-671b", "train_4k", multi_pod=False,
+                          microbatches=16, unroll=False,
+                          grad_accum_dtype="bfloat16")
+    record("deepseek_train4k__after_bf16accum", after)
+
+
+def lever2_grad_sharding():
+    before = dr.lower_cell("deepseek-v3-671b", "train_4k", multi_pod=False,
+                           microbatches=16, unroll=False, shard_grads=False)
+    record("deepseek_train4k__before", before)
+    after = dr.lower_cell("deepseek-v3-671b", "train_4k", multi_pod=False,
+                          microbatches=16, unroll=False, shard_grads=True)
+    record("deepseek_train4k__after_shardgrads", after)
+
+
+def lever3_seqsharded_kv():
+    before = dr.lower_cell("gemma2-9b", "decode_32k", multi_pod=False,
+                           unroll=False, cache_seq_shard=False)
+    record("gemma2_decode32k__before", before)
+    after = dr.lower_cell("gemma2-9b", "decode_32k", multi_pod=False,
+                          unroll=False, cache_seq_shard=True,
+                          decode_splits=16)
+    record("gemma2_decode32k__after_seqshard", after)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--lever", type=int, default=0, help="0 = all")
+    args = ap.parse_args()
+    if args.lever in (0, 2):
+        lever2_grad_sharding()
+    if args.lever in (0, 2, 4):
+        lever2b_bf16_grad_accum()
+    if args.lever in (0, 3):
+        lever3_seqsharded_kv()
+    if args.lever in (0, 1):
+        lever1_banded_prefill()
+    print("hillclimb measurements done")

@@ -1,0 +1,166 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline pass: exact per-chip FLOPs/bytes/collectives via depth
+extrapolation.
+
+XLA's ``cost_analysis()`` counts a ``lax.scan`` body once, so scanned layer
+stacks under-report FLOPs by the trip count.  Fully unrolling 48-61-layer
+models is compile-time-prohibitive on one CPU core, but every roofline
+quantity is *affine in the layer-run repeats*:
+
+    q(reps) = q_fixed + reps · q_layer
+
+so we compile two (three for xlstm) small UNROLLED depth variants per
+(arch × shape), solve for (q_fixed, q_layer), and evaluate at the full
+depth.  Exact for homogeneous/pattern stacks; for the SSM archs the
+time-chunk scans inside mamba/mLSTM still under-count — those cells are
+additionally corrected with closed-form per-token op counts and marked
+``ssm_corrected`` (see EXPERIMENTS.md §Roofline notes).
+
+Writes ``out/dryrun_roofline/single/<arch>__<shape>.json``.
+"""
+import argparse
+import dataclasses
+import json
+import traceback
+
+import jax
+
+from repro.analysis.roofline import roofline
+from repro.configs import ARCHS, SHAPES, cell_applicable, get_config
+from repro.launch import dryrun as dr
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "out", "dryrun_roofline", "single")
+
+
+def depth_variants(cfg):
+    """Returns (variants, reps_of_variant, reps_full) — each variant is a
+    structurally-identical config with reduced repeats of the dominant
+    layer run."""
+    r = dataclasses.replace
+    name = cfg.name
+    if cfg.moe is not None and cfg.moe.first_k_dense:      # deepseek
+        return ([r(cfg, n_layers=5), r(cfg, n_layers=7)], [2, 4], 58)
+    if cfg.moe is not None and cfg.moe.moe_every == 2:     # llama4
+        return ([r(cfg, n_layers=4), r(cfg, n_layers=8)], [2, 4], 24)
+    if cfg.local_global_every:                             # gemma2
+        return ([r(cfg, n_layers=4), r(cfg, n_layers=8)], [2, 4], 21)
+    if cfg.family == "hybrid":                             # hymba
+        return ([r(cfg, n_layers=5, hybrid_global_layers=(0, 2, 4)),
+                 r(cfg, n_layers=7, hybrid_global_layers=(0, 3, 6))],
+                [2, 4], 29)
+    if cfg.family == "ssm":                                # xlstm
+        # two mLSTM-count variants (sLSTM count fixed at 2)
+        return ([r(cfg, n_layers=6, slstm_layers=(1, 3)),
+                 r(cfg, n_layers=8, slstm_layers=(1, 3))],
+                [4, 6], 10)
+    # uniform stacks
+    return ([r(cfg, n_layers=2), r(cfg, n_layers=4)], [2, 4], cfg.n_layers)
+
+
+def measure(cfg, shape, microbatches):
+    """Lower+compile one variant unrolled; return quantity dict."""
+    # temporarily register the variant so lower_cell can find it
+    ARCHS[cfg.name] = cfg
+    try:
+        rec = dr.lower_cell(cfg.name, shape, multi_pod=False,
+                            microbatches=microbatches, unroll=True)
+    finally:
+        if cfg.name.endswith("-var"):
+            del ARCHS[cfg.name]
+    cs = rec["collectives"]["bytes_by_kind"]
+    return {
+        "flops": rec["cost"]["flops"],
+        "bytes": rec["cost"]["bytes_accessed"],
+        "coll": rec["collectives"]["total_bytes"],
+        "compile_s": rec["compile_s"],
+        "memory": rec.get("memory"),
+    }
+
+
+def extrapolate(qa, qb, ra, rb, rf):
+    slope = {k: (qb[k] - qa[k]) / (rb - ra)
+             for k in ("flops", "bytes", "coll")}
+    return {k: qa[k] + slope[k] * (rf - ra)
+            for k in ("flops", "bytes", "coll")}, slope
+
+
+def run_cell(arch, shape, force=False, microbatches=16):
+    os.makedirs(OUT, exist_ok=True)
+    path = os.path.join(OUT, f"{arch}__{shape}.json")
+    if os.path.exists(path) and not force:
+        print(f"[skip] {arch}/{shape}")
+        return json.load(open(path))
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    mb = microbatches if cell.kind == "train" else 1
+    print(f"[run ] roofline {arch}/{shape}", flush=True)
+    try:
+        variants, reps, rf = depth_variants(cfg)
+        va = dataclasses.replace(variants[0], name=arch + "-a-var")
+        vb = dataclasses.replace(variants[1], name=arch + "-b-var")
+        qa = measure(va, shape, mb)
+        qb = measure(vb, shape, mb)
+        q, slope = extrapolate(qa, qb, reps[0], reps[1], rf)
+        train = cell.kind == "train"
+        tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode"
+                                      else 1)
+        # microbatch scan also counts once: scale the per-step quantities
+        if mb > 1:
+            opt_overhead = 0  # optimizer outside the mb loop, negligible
+            for k in ("flops", "bytes", "coll"):
+                q[k] = q[k] * mb
+        rep = roofline(
+            arch=arch, shape=shape, mesh="single", chips=256,
+            hlo_flops=q["flops"], hlo_bytes=q["bytes"],
+            collective_bytes=q["coll"], tokens=tokens, train=train,
+            cfg=cfg)
+        rec = {
+            "arch": arch, "shape": shape, "ok": True,
+            "method": "depth-extrapolated-unrolled",
+            "variants": {"a": qa, "b": qb, "reps": reps, "full": rf},
+            "per_layer": slope,
+            "quantities": q,
+            "roofline": rep.to_dict(),
+            "ssm_corrected": cfg.family in ("hybrid", "ssm"),
+        }
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape, "ok": False,
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-1500:]}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if rec.get("ok"):
+        r = rec["roofline"]
+        print(f"[ok  ] {arch}/{shape} dominant={r['dominant']} "
+              f"frac={r['roofline_fraction']:.3f} "
+              f"useful={r['useful_ratio']:.2f}", flush=True)
+    else:
+        print(f"[FAIL] {arch}/{shape}: {rec['error']}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    fails = 0
+    for arch, cfg in list(ARCHS.items()):
+        if args.arch and arch != args.arch:
+            continue
+        for shape in SHAPES:
+            if args.shape and shape != args.shape:
+                continue
+            if not cell_applicable(cfg, shape):
+                continue
+            rec = run_cell(arch, shape, args.force)
+            fails += 0 if rec.get("ok") else 1
+    print(f"roofline pass done; {fails} failures")
+
+
+if __name__ == "__main__":
+    main()

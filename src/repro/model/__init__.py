@@ -1,0 +1,5 @@
+"""Composable model stack (functional; params as pytrees with logical axes)."""
+from repro.model.layers import Runtime
+from repro.model import transformer
+
+__all__ = ["Runtime", "transformer"]

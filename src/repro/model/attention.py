@@ -1,0 +1,273 @@
+"""Attention layers: GQA (+ sliding window / softcap) and MLA (DeepSeek).
+
+Every attention layer runs on the FuseMax execution engine
+(:mod:`repro.kernels.ops`): 1-pass cascade, deferred division — selectable
+``impl`` (pallas / jnp / ref) via :class:`repro.model.layers.Runtime`.
+
+Cache protocol (serving):
+  GQA full cache  {"k","v": [B, Hkv, Mmax, dh]}            — global layers
+  GQA ring cache  {"k","v": [B, Hkv, window, dh]}          — local layers,
+      slot = position % window; RoPE is applied at *write* time with the
+      absolute position, so reads need no rotation and the in-window mask
+      is implied by the ring (valid = min(t+1, window) slots).
+  MLA latent cache {"ckv": [B, Mmax, r], "krope": [B, Mmax, rd]} — decode
+      uses the absorbed form (scores in latent space; Hkv=1, group=H).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.kernels.ops import fusemax_attention, fusemax_decode
+from repro.model.layers import (
+    Runtime, _init, apply_norm, norm_init, rope,
+)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(h * dh)
+    params = {
+        "wq": _init(ks[0], (d, h, dh), s, dtype),
+        "wk": _init(ks[1], (d, hkv, dh), s, dtype),
+        "wv": _init(ks[2], (d, hkv, dh), s, dtype),
+        "wo": _init(ks[3], (h, dh, d), so, dtype),
+    }
+    axes = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    return params, axes
+
+
+def _proj_qkv(p, x, cfg: ModelConfig, positions, rt: Runtime):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhe->bhse", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhe->bhse", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhe->bhse", x, p["wv"].astype(dt))
+    q = rope(q, positions[:, None, :], cfg.rope_theta)
+    k = rope(k, positions[:, None, :], cfg.rope_theta)
+    q = rt.shard_activation(q, ("batch", "heads", "seq", "head_dim"))
+    k = rt.shard_activation(k, ("batch", "kv_heads", "seq", "head_dim"))
+    v = rt.shard_activation(v, ("batch", "kv_heads", "seq", "head_dim"))
+    return q, k, v
+
+
+def gqa_forward(
+    p, x: jnp.ndarray, cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
+    positions: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Full-sequence (training / prefill) attention. x: [B, S, d]."""
+    b, s_len, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s_len), (b, s_len))
+    q, k, v = _proj_qkv(p, x, cfg, positions, rt)
+    out = fusemax_attention(
+        q, k, v,
+        causal=cfg.causal,
+        window=spec.window,
+        softcap=cfg.attn_softcap,
+        impl=rt.attn_impl,
+        block_q=rt.block_q,
+        block_k=rt.block_k,
+        exp_impl=rt.exp_impl,
+        interpret=rt.interpret,
+        unroll_scan=rt.unroll_runs,
+    )                                                    # [B, H, S, dh]
+    out = rt.shard_activation(out, ("batch", "heads", "seq", "head_dim"))
+    return jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
+
+
+def gqa_init_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                   max_len: int, dtype) -> dict:
+    slots = spec.window if spec.window is not None else max_len
+    shape = (batch, cfg.n_kv_heads, slots, cfg.dh)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_decode(
+    p, x: jnp.ndarray, cache: dict, kv_len: jnp.ndarray,
+    cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
+) -> tuple[jnp.ndarray, dict]:
+    """One-token decode. x: [B, 1, d]; kv_len: [B] length *including* x."""
+    b = x.shape[0]
+    pos = (kv_len - 1)[:, None]                          # [B, 1]
+    q, k_new, v_new = _proj_qkv(p, x, cfg, pos, rt)      # [B, H*, 1, dh]
+
+    slots = cache["k"].shape[2]
+    slot = (pos % slots)[:, 0]                           # ring or linear
+    bidx = jnp.arange(b)
+    k_cache = cache["k"].at[bidx, :, slot].set(k_new[:, :, 0])
+    v_cache = cache["v"].at[bidx, :, slot].set(v_new[:, :, 0])
+
+    if spec.window is not None:
+        eff_len = jnp.minimum(kv_len, slots)             # ring: all in-window
+        win = None                                       # implied by ring
+    else:
+        eff_len = kv_len
+        win = None
+    out = fusemax_decode(
+        q, k_cache, v_cache, eff_len,
+        softcap=cfg.attn_softcap,
+        window=win,
+        impl=rt.attn_impl if rt.attn_impl != "jnp" else "jnp",
+        splits=rt.decode_splits,
+        exp_impl=rt.exp_impl,
+        interpret=rt.interpret,
+    )                                                    # [B, H, 1, dh]
+    y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.nope_dim + m.rope_dim
+    ks = jax.random.split(key, 6)
+    params = {
+        "w_dq": _init(ks[0], (d, m.q_lora_rank), 1 / math.sqrt(d), dtype),
+        "w_uq": _init(ks[1], (m.q_lora_rank, h, qk),
+                      1 / math.sqrt(m.q_lora_rank), dtype),
+        "w_dkv": _init(ks[2], (d, m.kv_lora_rank + m.rope_dim),
+                       1 / math.sqrt(d), dtype),
+        "w_uk": _init(ks[3], (m.kv_lora_rank, h, m.nope_dim),
+                      1 / math.sqrt(m.kv_lora_rank), dtype),
+        "w_uv": _init(ks[4], (m.kv_lora_rank, h, m.v_dim),
+                      1 / math.sqrt(m.kv_lora_rank), dtype),
+        "wo": _init(ks[5], (h, m.v_dim, d), 1 / math.sqrt(h * m.v_dim),
+                    dtype),
+    }
+    axes = {
+        "w_dq": ("embed", "latent"),
+        "w_uq": ("latent", "heads", "head_dim"),
+        "w_dkv": ("embed", "latent"),
+        "w_uk": ("latent", "heads", "head_dim"),
+        "w_uv": ("latent", "heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    qn, qna = norm_init(m.q_lora_rank, "rmsnorm", dtype)
+    kn, kna = norm_init(m.kv_lora_rank, "rmsnorm", dtype)
+    params["q_norm"], axes["q_norm"] = qn, qna
+    params["kv_norm"], axes["kv_norm"] = kn, kna
+    # q_norm/kv_norm scales live on the latent axis, not embed
+    axes["q_norm"] = {"scale": ("latent",)}
+    axes["kv_norm"] = {"scale": ("latent",)}
+    return params, axes
+
+
+def _mla_qkv_latent(p, x, cfg: ModelConfig, positions):
+    """Shared down-projections: returns (q_nope, q_rope, ckv, k_rope)."""
+    m = cfg.mla
+    dt = x.dtype
+    cq = apply_norm(p["q_norm"], x @ p["w_dq"].astype(dt))
+    q = jnp.einsum("bsr,rhe->bhse", cq, p["w_uq"].astype(dt))
+    q_nope, q_rope = q[..., : m.nope_dim], q[..., m.nope_dim:]
+    q_rope = rope(q_rope, positions[:, None, :], cfg.rope_theta)
+
+    dkv = x @ p["w_dkv"].astype(dt)                      # [B,S,r+rd]
+    ckv = apply_norm(p["kv_norm"], dkv[..., : m.kv_lora_rank])
+    k_rope = rope(dkv[..., m.kv_lora_rank:], positions, cfg.rope_theta)
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_forward(
+    p, x: jnp.ndarray, cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
+    positions: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Training/prefill MLA: expand latents per head, run FuseMax."""
+    m = cfg.mla
+    b, s_len, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s_len), (b, s_len))
+    q_nope, q_rope, ckv, k_rope = _mla_qkv_latent(p, x, cfg, positions)
+    dt = x.dtype
+    k_nope = jnp.einsum("bsr,rhe->bhse", ckv, p["w_uk"].astype(dt))
+    v = jnp.einsum("bsr,rhe->bhse", ckv, p["w_uv"].astype(dt))
+    h = cfg.n_heads
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)       # [B,H,S,qk]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, None], (b, h, s_len, m.rope_dim))],
+        axis=-1,
+    )
+    q = rt.shard_activation(q, ("batch", "heads", "seq", "head_dim"))
+    k = rt.shard_activation(k, ("batch", "heads", "seq", "head_dim"))
+    out = fusemax_attention(
+        q, k, v,
+        causal=cfg.causal,
+        softcap=cfg.attn_softcap,
+        scale=1.0 / math.sqrt(m.nope_dim + m.rope_dim),
+        impl=rt.attn_impl,
+        block_q=rt.block_q,
+        block_k=rt.block_k,
+        exp_impl=rt.exp_impl,
+        interpret=rt.interpret,
+        unroll_scan=rt.unroll_runs,
+    )
+    out = rt.shard_activation(out, ("batch", "heads", "seq", "head_dim"))
+    return jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(dt))
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, m.rope_dim), dtype),
+    }
+
+
+def mla_decode(
+    p, x: jnp.ndarray, cache: dict, kv_len: jnp.ndarray,
+    cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
+) -> tuple[jnp.ndarray, dict]:
+    """Absorbed-form decode: attention in latent space (Hkv=1, group=H).
+
+    Scores:  s[h, t] = q_nopeᵀ W_uk[h] · ckv_t + q_ropeᵀ · krope_t
+    Values:  out[h]  = (Σ_t a[h,t] ckv_t) W_uv[h]
+    The cache stores only the rank-r latent + shared rope key per token —
+    the MLA memory win — and FuseMax decode handles the Hkv=1 fiber.
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    dt = x.dtype
+    pos = (kv_len - 1)[:, None]
+    q_nope, q_rope, ckv_new, krope_new = _mla_qkv_latent(p, x, cfg, pos)
+
+    bidx = jnp.arange(b)
+    slot = pos[:, 0]
+    ckv = cache["ckv"].at[bidx, slot].set(ckv_new[:, 0])
+    krope = cache["krope"].at[bidx, slot].set(krope_new[:, 0])
+
+    # absorb W_uk into q: q_eff[h] ∈ R^{kv_lora_rank}
+    q_eff = jnp.einsum("bhse,rhe->bhsr", q_nope, p["w_uk"].astype(dt))
+    q_cat = jnp.concatenate([q_eff, q_rope], axis=-1)    # [B,H,1,r+rd]
+    k_cat = jnp.concatenate([ckv, krope], axis=-1)[:, None]  # [B,1,M,r+rd]
+    v_lat = ckv[:, None]                                 # [B,1,M,r]
+
+    out_lat = fusemax_decode(
+        q_cat, k_cat, v_lat, kv_len,
+        scale=1.0 / math.sqrt(m.nope_dim + m.rope_dim),
+        softcap=cfg.attn_softcap,
+        impl=rt.attn_impl if rt.attn_impl != "jnp" else "jnp",
+        splits=rt.decode_splits,
+        exp_impl=rt.exp_impl,
+        interpret=rt.interpret,
+    )                                                    # [B,H,1,r]
+    out = jnp.einsum("bhsr,rhe->bhse", out_lat, p["w_uv"].astype(dt))
+    y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(dt))
+    return y, {"ckv": ckv, "krope": krope}

@@ -1,0 +1,459 @@
+"""Recurrent sequence mixers: Mamba (selective SSM), mLSTM, sLSTM.
+
+These back the attention-free halves of the assigned architectures
+(hymba-1.5b's parallel SSM heads; xlstm-125m's block stack).  The paper's
+FuseMax mapping is inapplicable here — there is no softmax, hence no
+multi-pass hazard (see ``repro.core.taxonomy.mlstm_cascade``: natively
+1-pass) — but the *chunkwise* formulations below reuse the same
+running-max-corrected accumulation algebra (Cascade 5, Eqs. 48-52) for the
+exponential-gate stabilizers, which is what makes them trainable in one
+pass over the sequence with O(chunk) live footprint.
+
+Training uses chunked scans (production-shaped: parallel within a chunk,
+carried state across chunks); decode uses O(1) per-token state updates.
+Sequential oracles for testing live in the same module (``*_ref``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.model.layers import Runtime, _init, apply_norm
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective state-space model)
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    c = cfg.ssm
+    d = cfg.d_model
+    di = c.expand * d
+    n = c.state_dim
+    dt_rank = c.dt_rank or -(-d // 16)
+    ks = jax.random.split(key, 6)
+    s = 1 / math.sqrt(d)
+    params = {
+        "w_in": _init(ks[0], (d, 2 * di), s, dtype),       # x and z branches
+        "conv_w": _init(ks[1], (c.conv_dim, di), 0.5, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_xproj": _init(ks[2], (di, dt_rank + 2 * n), 1 / math.sqrt(di), dtype),
+        "w_dt": _init(ks[3], (dt_rank, di), 1 / math.sqrt(dt_rank), dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),           # softplus ≈ 0.01
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n)).astype(dtype)),
+        "d_skip": jnp.ones((di,), dtype),
+        "w_out": _init(ks[4], (di, d), 1 / math.sqrt(di), dtype),
+    }
+    axes = {
+        "w_in": ("embed", "inner"),
+        "conv_w": (None, "inner"),
+        "conv_b": ("inner",),
+        "w_xproj": ("inner", None),
+        "w_dt": (None, "inner"),
+        "dt_bias": ("inner",),
+        "a_log": ("inner", "state"),
+        "d_skip": ("inner",),
+        "w_out": ("inner", "embed"),
+    }
+    return params, axes
+
+
+def _mamba_inputs(p, x, cfg: ModelConfig):
+    """Shared projections: returns (u, z, dt, B, C, A) for the scan."""
+    c = cfg.ssm
+    dt_rank = c.dt_rank or -(-cfg.d_model // 16)
+    dtp = x.dtype
+    xz = x @ p["w_in"].astype(dtp)                       # [B,T,2di]
+    u, z = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv along T
+    kw = p["conv_w"].astype(dtp)                         # [K, di]
+    pad = jnp.pad(u, ((0, 0), (kw.shape[0] - 1, 0), (0, 0)))
+    u = sum(
+        pad[:, i : i + u.shape[1]] * kw[i]
+        for i in range(kw.shape[0])
+    ) + p["conv_b"].astype(dtp)
+    u = jax.nn.silu(u)
+    proj = u @ p["w_xproj"].astype(dtp)                  # [B,T,R+2n]
+    dt_in, b_in, c_in = jnp.split(
+        proj, [dt_rank, dt_rank + c.state_dim], axis=-1)
+    dt = jax.nn.softplus(
+        dt_in @ p["w_dt"].astype(dtp) + p["dt_bias"].astype(dtp))  # [B,T,di]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))         # [di, n]
+    return u, z, dt.astype(jnp.float32), b_in.astype(jnp.float32), \
+        c_in.astype(jnp.float32), a
+
+
+def mamba_forward(p, x, cfg: ModelConfig, rt: Runtime,
+                  chunk: int = 64) -> jnp.ndarray:
+    """Training/prefill Mamba: chunked scan (assoc. within, carry across)."""
+    b, t, _ = x.shape
+    u, z, dt, bb, cc, a = _mamba_inputs(p, x, cfg)
+    di, n = a.shape
+    t_pad = (-t) % chunk
+    if t_pad:
+        pads = lambda q: jnp.pad(q, ((0, 0), (0, t_pad)) + ((0, 0),) * (q.ndim - 2))
+        u, z, dt, bb, cc = map(pads, (u, z, dt, bb, cc))
+    tt = u.shape[1]
+    nc = tt // chunk
+
+    # discretize: ā = exp(dt·A) [B,T,di,n]; b̄x = dt·B·u
+    def chunk_body(h, idx):
+        sl = lambda q: jax.lax.dynamic_slice_in_dim(q, idx * chunk, chunk, 1)
+        u_c, dt_c, b_c, c_c = sl(u), sl(dt), sl(bb), sl(cc)
+        abar = jnp.exp(dt_c[..., None] * a)                    # [B,L,di,n]
+        bx = (dt_c * u_c.astype(jnp.float32))[..., None] * b_c[:, :, None, :]
+        # associative scan within the chunk
+        def comb(l, r):
+            return (l[0] * r[0], r[0] * l[1] + r[1])
+        a_sc, h_sc = jax.lax.associative_scan(comb, (abar, bx), axis=1)
+        # inject carry: h_t = a_sc_t · h_in + h_sc_t
+        h_all = a_sc * h[:, None] + h_sc                       # [B,L,di,n]
+        y = jnp.einsum("blds,bls->bld", h_all, c_c)
+        h_next = h_all[:, -1]
+        return h_next, y
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    body = jax.checkpoint(chunk_body)
+    h_fin, ys = jax.lax.scan(body, h0, jnp.arange(nc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * chunk, di)[:, :t]
+    y = y.astype(x.dtype) + u[:, :t] * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z[:, :t])
+    return y @ p["w_out"].astype(x.dtype)
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    c = cfg.ssm
+    di = c.expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, di, c.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, c.conv_dim - 1, di), dtype),
+    }
+
+
+def mamba_step(p, x, state: dict, cfg: ModelConfig, rt: Runtime):
+    """Single-token decode: O(1) state update. x: [B, 1, d]."""
+    c = cfg.ssm
+    dt_rank = c.dt_rank or -(-cfg.d_model // 16)
+    dtp = x.dtype
+    xz = x[:, 0] @ p["w_in"].astype(dtp)                 # [B, 2di]
+    u, z = jnp.split(xz, 2, axis=-1)
+    hist = jnp.concatenate([state["conv"], u[:, None]], axis=1)  # [B,K,di]
+    kw = p["conv_w"].astype(dtp)
+    u_c = jax.nn.silu(
+        jnp.einsum("bkd,kd->bd", hist, kw) + p["conv_b"].astype(dtp))
+    proj = u_c @ p["w_xproj"].astype(dtp)
+    dt_in, b_in, c_in = jnp.split(
+        proj, [dt_rank, dt_rank + c.state_dim], axis=-1)
+    dt = jax.nn.softplus(
+        dt_in @ p["w_dt"].astype(dtp) + p["dt_bias"].astype(dtp)
+    ).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    abar = jnp.exp(dt[..., None] * a)                    # [B,di,n]
+    bx = (dt * u_c.astype(jnp.float32))[..., None] * b_in[:, None, :].astype(jnp.float32)
+    h = abar * state["h"] + bx
+    y = jnp.einsum("bds,bs->bd", h, c_in.astype(jnp.float32)).astype(dtp)
+    y = y + u_c * p["d_skip"].astype(dtp)
+    y = y * jax.nn.silu(z)
+    out = (y @ p["w_out"].astype(dtp))[:, None]
+    return out, {"h": h, "conv": hist[:, 1:]}
+
+
+def mamba_ref(p, x, cfg: ModelConfig):
+    """Sequential oracle (per-timestep recurrence)."""
+    b, t, _ = x.shape
+    u, z, dt, bb, cc, a = _mamba_inputs(p, x, cfg)
+    di, n = a.shape
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp
+        abar = jnp.exp(dt_t[..., None] * a)
+        h = abar * h + (dt_t * u_t.astype(jnp.float32))[..., None] * b_t[:, None]
+        return h, jnp.einsum("bds,bs->bd", h, c_t)
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(u, 0, 1), jnp.moveaxis(dt, 0, 1),
+         jnp.moveaxis(bb, 0, 1), jnp.moveaxis(cc, 0, 1)))
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    y = y + u * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory cell)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    di = (cfg.ssm.expand if cfg.ssm else 2) * d
+    h = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    s, si = 1 / math.sqrt(d), 1 / math.sqrt(di)
+    params = {
+        "w_in": _init(ks[0], (d, 2 * di), s, dtype),
+        "conv_w": _init(ks[1], (4, di), 0.5, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": _init(ks[2], (di, di), si, dtype),
+        "wk": _init(ks[3], (di, di), si, dtype),
+        "wv": _init(ks[4], (di, di), si, dtype),
+        "w_gates": _init(ks[5], (di, 2 * h), si, jnp.float32),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((h,)), jnp.full((h,), 3.0)]).astype(jnp.float32),
+        "norm_scale": jnp.zeros((di,), dtype),
+        "w_out": _init(ks[6], (di, d), si, dtype),
+    }
+    axes = {
+        "w_in": ("embed", "inner"), "conv_w": (None, "inner"),
+        "conv_b": ("inner",), "wq": ("inner", "inner"),
+        "wk": ("inner", "inner"), "wv": ("inner", "inner"),
+        "w_gates": ("inner", None), "b_gates": (None,),
+        "norm_scale": ("inner",), "w_out": ("inner", "embed"),
+    }
+    return params, axes
+
+
+def _mlstm_inputs(p, x, cfg: ModelConfig):
+    h = cfg.n_heads
+    dtp = x.dtype
+    xz = x @ p["w_in"].astype(dtp)
+    u, z = jnp.split(xz, 2, axis=-1)
+    kw = p["conv_w"].astype(dtp)
+    pad = jnp.pad(u, ((0, 0), (kw.shape[0] - 1, 0), (0, 0)))
+    c = jax.nn.silu(sum(
+        pad[:, i : i + u.shape[1]] * kw[i] for i in range(kw.shape[0])
+    ) + p["conv_b"].astype(dtp))
+    b, t, di = u.shape
+    dh = di // h
+    q = (c @ p["wq"].astype(dtp)).reshape(b, t, h, dh)
+    k = (c @ p["wk"].astype(dtp)).reshape(b, t, h, dh) / math.sqrt(dh)
+    v = (u @ p["wv"].astype(dtp)).reshape(b, t, h, dh)
+    gates = c.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]
+    log_i = gates[..., :h]                                # exp input gate
+    log_f = -jax.nn.softplus(-gates[..., h:])             # log σ(f) ≤ 0
+    return q, k, v, log_i, log_f, z
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, carry, *, eps=1e-6):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    q,k,v: [B,H,L,dh]; log_i/log_f: [B,H,L]; carry = (C [B,H,dh,dh],
+    n [B,H,dh], m [B,H]) stabilized by exp(m).  Returns (h, new_carry).
+    The running-max correction across chunks is exactly the Cascade-5
+    algebra (Eqs. 48-52) applied to the gate stabilizer.
+    """
+    c_prev, n_prev, m_prev = carry
+    fcum = jnp.cumsum(log_f, axis=-1)                     # F_t (inclusive)
+    u = log_i - fcum                                      # u_j = log i_j - F_j
+    mtilde = jnp.maximum(
+        jax.lax.cummax(u, axis=u.ndim - 1), m_prev[..., None])
+    m_t = fcum + mtilde                                   # running stabilizer
+    # intra-chunk weights: D[t,j] = exp(u_j - m̃_t) for j ≤ t
+    l = q.shape[-2]
+    dmat = jnp.exp(u[..., None, :] - mtilde[..., :, None])
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    dmat = jnp.where(tri, dmat, 0.0)
+    s = jnp.einsum("bhld,bhmd->bhlm", q, k).astype(jnp.float32)  # scores
+    w = s * dmat
+    h_intra = jnp.einsum("bhlm,bhmd->bhld", w.astype(q.dtype), v)
+    # carry-in contribution, corrected to the new stabilizer
+    cf = jnp.exp(m_prev[..., None] + fcum - m_t)          # [B,H,L]
+    h_carry = jnp.einsum("bhld,bhde->bhle", q, c_prev.astype(q.dtype))
+    h_all = h_intra.astype(jnp.float32) + cf[..., None] * h_carry.astype(jnp.float32)
+    # normalizer: n̂_t·q_t = Σ_{j≤t} D[t,j]·(q_t·k_j) + cf_t·(n̂_prev·q_t)
+    n_dot = jnp.sum(w, axis=-1) + cf * jnp.einsum(
+        "bhld,bhd->bhl", q.astype(jnp.float32), n_prev)
+    denom = jnp.maximum(jnp.abs(n_dot), jnp.exp(-m_t)) + eps
+    h_out = h_all / denom[..., None]
+    # ---- chunk-end state update (Eqs. 48-52 analogue) --------------------
+    f_last = fcum[..., -1:]
+    m_new = (fcum[..., -1] + mtilde[..., -1])
+    upd = jnp.exp(u + f_last - m_new[..., None])          # per-j weight
+    c_new = jnp.exp(m_prev + f_last[..., 0] - m_new)[..., None, None] * c_prev \
+        + jnp.einsum("bhl,bhld,bhle->bhde", upd, k.astype(jnp.float32),
+                     v.astype(jnp.float32))
+    n_new = jnp.exp(m_prev + f_last[..., 0] - m_new)[..., None] * n_prev \
+        + jnp.einsum("bhl,bhld->bhd", upd, k.astype(jnp.float32))
+    return h_out.astype(q.dtype), (c_new, n_new, m_new)
+
+
+def mlstm_forward(p, x, cfg: ModelConfig, rt: Runtime,
+                  chunk: int = 64) -> jnp.ndarray:
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    q, k, v, log_i, log_f, z = _mlstm_inputs(p, x, cfg)
+    di = z.shape[-1]
+    dh = di // h
+    t_pad = (-t) % chunk
+    if t_pad:
+        q, k, v = (jnp.pad(a, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+                   for a in (q, k, v))
+        log_i = jnp.pad(log_i, ((0, 0), (0, t_pad), (0, 0)),
+                        constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, t_pad), (0, 0)))
+    tt = t + t_pad
+    nc = tt // chunk
+    # [B,H,T,dh] layout, chunked
+    reh = lambda a: jnp.moveaxis(a, 2, 1).reshape(b, h, nc, chunk, dh)
+    qh, kh, vh = (reh(a) for a in (q, k, v))
+    gi = jnp.moveaxis(log_i, 2, 1).reshape(b, h, nc, chunk)
+    gf = jnp.moveaxis(log_f, 2, 1).reshape(b, h, nc, chunk)
+
+    def body(carry, idx):
+        out, carry = _mlstm_chunk(
+            qh[:, :, idx], kh[:, :, idx], vh[:, :, idx],
+            gi[:, :, idx], gf[:, :, idx], carry)
+        return carry, out
+
+    c0 = (jnp.zeros((b, h, dh, dh), jnp.float32),
+          jnp.zeros((b, h, dh), jnp.float32),
+          jnp.full((b, h), -1e30, jnp.float32))
+    _, outs = jax.lax.scan(jax.checkpoint(body), c0, jnp.arange(nc))
+    # outs: [nc, B, H, L, dh] → [B, T, di]
+    y = jnp.moveaxis(outs, 0, 2).reshape(b, h, tt, dh)[:, :, :t]
+    y = jnp.moveaxis(y, 1, 2).reshape(b, t, di)
+    y = apply_norm({"scale": p["norm_scale"]}, y)
+    y = y * jax.nn.silu(z[:, :t])
+    return y @ p["w_out"].astype(x.dtype)
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    h = cfg.n_heads
+    di = (cfg.ssm.expand if cfg.ssm else 2) * cfg.d_model
+    dh = di // h
+    return {
+        "c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, 3, di), dtype),
+    }
+
+
+def mlstm_step(p, x, state: dict, cfg: ModelConfig, rt: Runtime):
+    """O(1) decode step. x: [B, 1, d]."""
+    h = cfg.n_heads
+    dtp = x.dtype
+    xz = x[:, 0] @ p["w_in"].astype(dtp)
+    u, z = jnp.split(xz, 2, axis=-1)
+    hist = jnp.concatenate([state["conv"], u[:, None]], axis=1)
+    kw = p["conv_w"].astype(dtp)
+    c = jax.nn.silu(
+        jnp.einsum("bkd,kd->bd", hist, kw) + p["conv_b"].astype(dtp))
+    b, di = u.shape
+    dh = di // h
+    q = (c @ p["wq"].astype(dtp)).reshape(b, h, dh)
+    k = (c @ p["wk"].astype(dtp)).reshape(b, h, dh) / math.sqrt(dh)
+    v = (u @ p["wv"].astype(dtp)).reshape(b, h, dh)
+    gates = c.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]
+    log_i, log_f = gates[..., :h], -jax.nn.softplus(-gates[..., h:])
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    f_eff = jnp.exp(log_f + state["m"] - m_new)
+    i_eff = jnp.exp(log_i - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c_new = f_eff[..., None, None] * state["c"] + \
+        i_eff[..., None, None] * kf[..., :, None] * vf[..., None, :]
+    n_new = f_eff[..., None] * state["n"] + i_eff[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhde,bhd->bhe", c_new, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, qf)),
+                      jnp.exp(-m_new)) + 1e-6
+    y = (num / den[..., None]).reshape(b, di).astype(dtp)
+    y = apply_norm({"scale": p["norm_scale"]}, y)
+    y = y * jax.nn.silu(z)
+    out = (y @ p["w_out"].astype(dtp))[:, None]
+    return out, {"c": c_new, "n": n_new, "m": m_new, "conv": hist[:, 1:]}
+
+
+def mlstm_ref(p, x, cfg: ModelConfig):
+    """Sequential oracle: one mlstm_step per token."""
+    state = mlstm_init_state(cfg, x.shape[0], x.dtype)
+
+    def step(st, xt):
+        y, st = mlstm_step(p, xt[:, None], st, cfg, Runtime())
+        return st, y[:, 0]
+
+    _, ys = jax.lax.scan(step, state, jnp.moveaxis(x, 0, 1))
+    return jnp.moveaxis(ys, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory cell with exponential gating + block recurrence)
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    params = {
+        "w_gates": _init(ks[0], (d, 4 * d), 1 / math.sqrt(d), jnp.float32),
+        "r_gates": _init(ks[1], (h, dh, 4 * dh), 1 / math.sqrt(dh),
+                         jnp.float32),
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "norm_scale": jnp.zeros((d,), dtype),
+        "w_out": _init(ks[2], (d, d), 1 / math.sqrt(d), dtype),
+    }
+    axes = {
+        "w_gates": ("embed", None), "r_gates": ("heads", None, None),
+        "b_gates": (None,), "norm_scale": ("embed",),
+        "w_out": ("embed", "embed"),
+    }
+    return params, axes
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(p, xt, st, n_heads: int):
+    """xt: [B, d] fp32. One stabilized sLSTM step."""
+    b, d = xt.shape
+    dh = d // n_heads
+    hprev = st["h"].reshape(b, n_heads, dh)
+    rec = jnp.einsum("bhe,hef->bhf", hprev, p["r_gates"]).reshape(b, 4 * d)
+    gates = xt @ p["w_gates"] + rec + p["b_gates"]
+    zi, fi, ii, oi = jnp.split(gates, 4, axis=-1)
+    zt = jnp.tanh(zi)
+    ot = jax.nn.sigmoid(oi)
+    log_f = -jax.nn.softplus(-fi)
+    m_new = jnp.maximum(log_f + st["m"], ii)
+    i_eff = jnp.exp(ii - m_new)
+    f_eff = jnp.exp(log_f + st["m"] - m_new)
+    c_new = f_eff * st["c"] + i_eff * zt
+    n_new = f_eff * st["n"] + i_eff
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+
+
+def slstm_forward(p, x, cfg: ModelConfig, rt: Runtime) -> jnp.ndarray:
+    b, t, d = x.shape
+    st0 = slstm_init_state(cfg, b, x.dtype)
+
+    def step(st, xt):
+        st = _slstm_cell(p, xt.astype(jnp.float32), st, cfg.n_heads)
+        return st, st["h"]
+
+    _, hs = jax.lax.scan(step, st0, jnp.moveaxis(x, 0, 1))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    y = apply_norm({"scale": p["norm_scale"]}, y)
+    return y @ p["w_out"].astype(x.dtype)
+
+
+def slstm_step(p, x, state: dict, cfg: ModelConfig, rt: Runtime):
+    st = _slstm_cell(p, x[:, 0].astype(jnp.float32), state, cfg.n_heads)
+    y = st["h"].astype(x.dtype)
+    y = apply_norm({"scale": p["norm_scale"]}, y)
+    return (y @ p["w_out"].astype(x.dtype))[:, None], st

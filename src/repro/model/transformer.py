@@ -1,0 +1,556 @@
+"""Full decoder model: run-grouped layer stack, training + serving entry points.
+
+The config's per-layer specs are grouped into *runs* of equal structure
+(``ModelConfig.runs()``); each run's parameters are stacked on a leading
+axis and executed with ``lax.scan`` (+ per-layer remat) — this keeps HLO
+size and compile time bounded for the 61-layer/671B configs while leaving
+heterogeneous stacks (gemma-2 local/global alternation, hymba's three
+global layers, xlstm's sLSTM positions) exactly representable.
+
+Entry points:
+  ``init``          → (params, axes)
+  ``forward``       → logits   [B, S, vocab]            (training)
+  ``loss_fn``       → scalar + metrics                  (training)
+  ``init_cache``    → per-run stacked caches            (serving)
+  ``prefill``       → (last-token logits, caches)       (serving)
+  ``decode_step``   → (logits, caches)                  (serving)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.model import attention as attn_mod
+from repro.model import moe as moe_mod
+from repro.model import ssm as ssm_mod
+from repro.model.layers import (
+    Runtime, _init, apply_norm, embed, embedding_init, mlp, mlp_init,
+    norm_init, softcap, unembed,
+)
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Single layer
+# ---------------------------------------------------------------------------
+
+def layer_init(key, cfg: ModelConfig, spec: LayerSpec, dtype):
+    ks = iter(jax.random.split(key, 8))
+    params, axes = {}, {}
+
+    def add(name, pa):
+        params[name], axes[name] = pa
+
+    add("ln1", norm_init(cfg.d_model, cfg.norm, dtype))
+    if spec.attn == "gqa":
+        add("attn", attn_mod.gqa_init(next(ks), cfg, dtype))
+    elif spec.attn == "mla":
+        add("attn", attn_mod.mla_init(next(ks), cfg, dtype))
+    if spec.ssm == "mamba":
+        add("ssm", ssm_mod.mamba_init(next(ks), cfg, dtype))
+    elif spec.ssm == "mlstm":
+        add("ssm", ssm_mod.mlstm_init(next(ks), cfg, dtype))
+    elif spec.ssm == "slstm":
+        add("ssm", ssm_mod.slstm_init(next(ks), cfg, dtype))
+    if cfg.post_norm and (spec.attn != "none" or spec.ssm is not None):
+        add("post1", norm_init(cfg.d_model, cfg.norm, dtype))
+    if spec.mlp != "none":
+        add("ln2", norm_init(cfg.d_model, cfg.norm, dtype))
+        if spec.mlp == "dense":
+            add("mlp", mlp_init(next(ks), cfg.d_model, cfg.d_ff, dtype))
+        else:
+            add("moe", moe_mod.moe_init(next(ks), cfg, dtype))
+        if cfg.post_norm:
+            add("post2", norm_init(cfg.d_model, cfg.norm, dtype))
+    return params, axes
+
+
+def layer_forward(p, x, cfg: ModelConfig, spec: LayerSpec, rt: Runtime):
+    """Training / prefill-shape layer. x: [B, S, d]."""
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    parts = []
+    if spec.attn == "gqa":
+        parts.append(attn_mod.gqa_forward(p["attn"], h, cfg, spec, rt))
+    elif spec.attn == "mla":
+        parts.append(attn_mod.mla_forward(p["attn"], h, cfg, spec, rt))
+    if spec.ssm == "mamba":
+        parts.append(ssm_mod.mamba_forward(p["ssm"], h, cfg, rt))
+    elif spec.ssm == "mlstm":
+        parts.append(ssm_mod.mlstm_forward(p["ssm"], h, cfg, rt))
+    elif spec.ssm == "slstm":
+        parts.append(ssm_mod.slstm_forward(p["ssm"], h, cfg, rt))
+    y = parts[0] if len(parts) == 1 else \
+        sum(parts) / len(parts)                      # hymba: mean-fuse
+    if "post1" in p:
+        y = apply_norm(p["post1"], y, cfg.norm)
+    x = x + y
+    x = rt.shard_activation(x, ("batch", "seq", "embed"))
+    if spec.mlp != "none":
+        h2 = apply_norm(p["ln2"], x, cfg.norm)
+        if spec.mlp == "dense":
+            y2 = mlp(p["mlp"], h2, cfg.mlp_act, rt)
+        else:
+            y2 = moe_mod.moe_ffn(p["moe"], h2, cfg, rt)
+        if "post2" in p:
+            y2 = apply_norm(p["post2"], y2, cfg.norm)
+        x = x + y2
+        x = rt.shard_activation(x, ("batch", "seq", "embed"))
+    return x
+
+
+def layer_init_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     max_len: int, dtype) -> dict:
+    cache = {}
+    if spec.attn == "gqa":
+        cache["attn"] = attn_mod.gqa_init_cache(cfg, spec, batch, max_len,
+                                                dtype)
+    elif spec.attn == "mla":
+        cache["attn"] = attn_mod.mla_init_cache(cfg, batch, max_len, dtype)
+    if spec.ssm == "mamba":
+        cache["ssm"] = ssm_mod.mamba_init_state(cfg, batch, dtype)
+    elif spec.ssm == "mlstm":
+        cache["ssm"] = ssm_mod.mlstm_init_state(cfg, batch, dtype)
+    elif spec.ssm == "slstm":
+        cache["ssm"] = ssm_mod.slstm_init_state(cfg, batch, dtype)
+    return cache
+
+
+def layer_decode(p, x, cache, kv_len, cfg: ModelConfig, spec: LayerSpec,
+                 rt: Runtime):
+    """One-token decode. x: [B, 1, d]; kv_len includes the current token."""
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    parts = []
+    new_cache = dict(cache)
+    if spec.attn == "gqa":
+        y, new_cache["attn"] = attn_mod.gqa_decode(
+            p["attn"], h, cache["attn"], kv_len, cfg, spec, rt)
+        parts.append(y)
+    elif spec.attn == "mla":
+        y, new_cache["attn"] = attn_mod.mla_decode(
+            p["attn"], h, cache["attn"], kv_len, cfg, spec, rt)
+        parts.append(y)
+    if spec.ssm == "mamba":
+        y, new_cache["ssm"] = ssm_mod.mamba_step(
+            p["ssm"], h, cache["ssm"], cfg, rt)
+        parts.append(y)
+    elif spec.ssm == "mlstm":
+        y, new_cache["ssm"] = ssm_mod.mlstm_step(
+            p["ssm"], h, cache["ssm"], cfg, rt)
+        parts.append(y)
+    elif spec.ssm == "slstm":
+        y, new_cache["ssm"] = ssm_mod.slstm_step(
+            p["ssm"], h, cache["ssm"], cfg, rt)
+        parts.append(y)
+    y = parts[0] if len(parts) == 1 else sum(parts) / len(parts)
+    if "post1" in p:
+        y = apply_norm(p["post1"], y, cfg.norm)
+    x = x + y
+    if spec.mlp != "none":
+        h2 = apply_norm(p["ln2"], x, cfg.norm)
+        if spec.mlp == "dense":
+            y2 = mlp(p["mlp"], h2, cfg.mlp_act, rt)
+        else:
+            y2 = moe_mod.moe_ffn(p["moe"], h2, cfg, rt)
+        if "post2" in p:
+            y2 = apply_norm(p["post2"], y2, cfg.norm)
+        x = x + y2
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, key, rt: Runtime = Runtime()):
+    """Returns (params, axes). Run params are stacked on a leading axis."""
+    dtype = rt.param_dtype
+    keys = jax.random.split(key, len(cfg.runs()) + 3)
+    params: dict = {}
+    axes: dict = {}
+
+    params["embed"], axes["embed"] = embedding_init(
+        keys[0], cfg.vocab, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["unembed"], axes["unembed"] = embedding_init(
+            keys[1], cfg.vocab, cfg.d_model, dtype)
+    if cfg.frontend != "tokens":
+        params["frontend_proj"] = {
+            "w": _init(keys[2], (cfg.d_model, cfg.d_model),
+                       1 / math.sqrt(cfg.d_model), dtype)}
+        axes["frontend_proj"] = {"w": ("embed", "embed")}
+
+    runs_p, runs_a = [], []
+    for i, (pattern, reps) in enumerate(cfg.runs()):
+        pos_p, pos_a = [], []
+        for j, spec in enumerate(pattern):
+            rk = jax.random.split(
+                jax.random.fold_in(key, 1000 + 16 * i + j), reps)
+            if reps == 1:
+                p, a = layer_init(rk[0], cfg, spec, dtype)
+            else:
+                p = jax.vmap(
+                    lambda kk: layer_init(kk, cfg, spec, dtype)[0])(rk)
+                a = layer_init(rk[0], cfg, spec, dtype)[1]
+                a = jax.tree.map(lambda ax: ("layers", *ax), a,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+            pos_p.append(p)
+            pos_a.append(a)
+        runs_p.append(pos_p)
+        runs_a.append(pos_a)
+    params["runs"] = runs_p
+    axes["runs"] = runs_a
+
+    params["final_norm"], axes["final_norm"] = norm_init(
+        cfg.d_model, cfg.norm, dtype)
+
+    if cfg.n_mtp:
+        mtp_p, mtp_a = [], []
+        for j in range(cfg.n_mtp):
+            spec = cfg.layer_specs()[-1]
+            p, a = layer_init(jax.random.fold_in(key, 2000 + j), cfg, spec,
+                              dtype)
+            mtp_p.append(p)
+            mtp_a.append(a)
+        params["mtp"] = mtp_p
+        axes["mtp"] = mtp_a
+    return params, axes
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch: dict, rt: Runtime):
+    dtype = rt.activation_dtype
+    if cfg.frontend == "tokens":
+        x = embed(params["embed"], batch["inputs"], dtype)
+    else:
+        # modality stub: precomputed frame/patch embeddings [B, S, d]
+        x = batch["inputs"].astype(dtype) @ params["frontend_proj"]["w"].astype(dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    return rt.shard_activation(x, ("batch", "seq", "embed"))
+
+
+def _run_forward(params_run, x, cfg, pattern, reps, rt):
+    """Apply one (pattern, reps) run: scan over reps of the pattern."""
+    def apply_pattern(ps, h):
+        for spec_j, p_j in zip(pattern, ps):
+            h = layer_forward(p_j, h, cfg, spec_j, rt)
+        return h
+
+    if reps == 1:
+        return jax.checkpoint(apply_pattern)(tuple(params_run), x)
+
+    if rt.unroll_runs:
+        # dry-run fidelity mode: XLA's cost_analysis does not multiply
+        # while-loop trip counts, so roofline FLOPs need unrolled layers.
+        for i in range(reps):
+            ps = tuple(jax.tree.map(lambda a: a[i], p_j)
+                       for p_j in params_run)
+            x = jax.checkpoint(apply_pattern)(ps, x)
+        return x
+
+    def body(h, ps):
+        return apply_pattern(ps, h), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, tuple(params_run))
+    return x
+
+
+def forward(cfg: ModelConfig, params, batch: dict,
+            rt: Runtime = Runtime()) -> jnp.ndarray:
+    """Training-shape forward. Returns logits [B, S, vocab]."""
+    x = _embed_inputs(cfg, params, batch, rt)
+    for (pattern, reps), p_run in zip(cfg.runs(), params["runs"]):
+        x = _run_forward(p_run, x, cfg, pattern, reps, rt)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(head, x)
+    logits = rt.shard_activation(logits, ("batch", "seq", "vocab"))
+    logits = softcap(logits, cfg.final_softcap)
+    return logits
+
+
+def loss_fn(cfg: ModelConfig, params, batch: dict,
+            rt: Runtime = Runtime()):
+    """Causal LM loss (next-token xent) + optional MTP losses."""
+    logits = forward(cfg, params, batch, rt)
+    targets = batch["targets"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(targets.shape, jnp.float32)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    tgt_logit = jnp.take_along_axis(
+        logits.astype(jnp.float32), targets[..., None], axis=-1)[..., 0]
+    nll = (lse - tgt_logit) * mask
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    metrics = {"loss": loss, "tokens": jnp.sum(mask)}
+
+    if cfg.n_mtp and "mtp_targets" in batch:
+        # DeepSeek-style multi-token prediction: each extra head applies one
+        # more transformer layer to the trunk output and predicts t+1+j.
+        x = _embed_inputs(cfg, params, batch, rt)
+        for (pattern, reps), p_run in zip(cfg.runs(), params["runs"]):
+            x = _run_forward(p_run, x, cfg, pattern, reps, rt)
+        head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        spec = cfg.layer_specs()[-1]
+        mtp_loss = 0.0
+        for j, p_mtp in enumerate(params["mtp"]):
+            x = layer_forward(p_mtp, x, cfg, spec, rt)
+            lg = softcap(unembed(
+                head, apply_norm(params["final_norm"], x, cfg.norm)),
+                cfg.final_softcap)
+            tj = batch["mtp_targets"][..., j]
+            lse_j = jax.nn.logsumexp(lg.astype(jnp.float32), axis=-1)
+            tl_j = jnp.take_along_axis(
+                lg.astype(jnp.float32), tj[..., None], axis=-1)[..., 0]
+            mtp_loss = mtp_loss + jnp.sum((lse_j - tl_j) * mask) / \
+                jnp.maximum(jnp.sum(mask), 1.0)
+        metrics["mtp_loss"] = mtp_loss
+        loss = loss + 0.1 * mtp_loss
+    metrics["total_loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """Per-run, per-pattern-position caches (stacked over repeats)."""
+    caches = []
+    for pattern, reps in cfg.runs():
+        pos = []
+        for spec in pattern:
+            c1 = layer_init_cache(cfg, spec, batch, max_len, dtype)
+            if reps > 1:
+                c1 = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (reps, *a.shape)).copy(),
+                    c1)
+            pos.append(c1)
+        caches.append(pos)
+    return caches
+
+
+def cache_axes(cfg: ModelConfig):
+    """Structural logical-axes tree mirroring ``init_cache`` output."""
+    def layer_axes(spec: LayerSpec) -> dict:
+        ax = {}
+        if spec.attn == "gqa":
+            ax["attn"] = {"k": ("batch", "kv_heads", None, None),
+                          "v": ("batch", "kv_heads", None, None)}
+        elif spec.attn == "mla":
+            ax["attn"] = {"ckv": ("batch", None, None),
+                          "krope": ("batch", None, None)}
+        if spec.ssm == "mamba":
+            ax["ssm"] = {"h": ("batch", "inner", None),
+                         "conv": ("batch", None, "inner")}
+        elif spec.ssm == "mlstm":
+            ax["ssm"] = {"c": ("batch", "heads", None, None),
+                         "n": ("batch", "heads", None),
+                         "m": ("batch", "heads"),
+                         "conv": ("batch", None, "inner")}
+        elif spec.ssm == "slstm":
+            ax["ssm"] = {k: ("batch", "embed") for k in ("c", "n", "m", "h")}
+        return ax
+
+    axes = []
+    for pattern, reps in cfg.runs():
+        pos = []
+        for spec in pattern:
+            a = layer_axes(spec)
+            if reps > 1:
+                a = jax.tree.map(lambda t: ("layers", *t), a,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+            pos.append(a)
+        axes.append(pos)
+    return axes
+
+
+def decode_step(cfg: ModelConfig, params, token_or_embed, caches,
+                kv_len: jnp.ndarray, rt: Runtime = Runtime()):
+    """One decode step for the whole batch.
+
+    token_or_embed: [B, 1] int tokens or [B, 1, d] embeddings.
+    kv_len: [B] sequence length *including* the current token.
+    Returns (logits [B, vocab], new_caches).
+    """
+    batch = {"inputs": token_or_embed}
+    x = _embed_inputs(cfg, params, batch, rt)
+    new_caches = []
+    for (pattern, reps), p_run, cache in zip(cfg.runs(), params["runs"],
+                                             caches):
+        if reps == 1:
+            cs = []
+            for spec_j, p_j, c_j in zip(pattern, p_run, cache):
+                x, c_new = layer_decode(p_j, x, c_j, kv_len, cfg, spec_j, rt)
+                cs.append(c_new)
+            new_caches.append(cs)
+            continue
+
+        if rt.unroll_runs:
+            outs = [[] for _ in pattern]
+            for i in range(reps):
+                for j, (spec_j, p_j, c_j) in enumerate(
+                        zip(pattern, p_run, cache)):
+                    p_i = jax.tree.map(lambda a: a[i], p_j)
+                    c_i = jax.tree.map(lambda a: a[i], c_j)
+                    x, c_new = layer_decode(p_i, x, c_i, kv_len, cfg,
+                                            spec_j, rt)
+                    outs[j].append(c_new)
+            new_caches.append([
+                jax.tree.map(lambda *xs: jnp.stack(xs), *o) for o in outs])
+            continue
+
+        def body(h, pc):
+            ps, cs_in = pc
+            cs_out = []
+            for spec_j, p_j, c_j in zip(pattern, ps, cs_in):
+                h, c_new = layer_decode(p_j, h, c_j, kv_len, cfg, spec_j,
+                                        rt)
+                cs_out.append(c_new)
+            return h, tuple(cs_out)
+
+        x, c = jax.lax.scan(body, x, (tuple(p_run), tuple(cache)))
+        new_caches.append(list(c))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(head, x[:, 0])
+    logits = rt.shard_activation(logits, ("batch", "vocab"))
+    logits = softcap(logits, cfg.final_softcap)
+    return logits, new_caches
+
+
+def prefill(cfg: ModelConfig, params, batch: dict, caches,
+            rt: Runtime = Runtime()):
+    """Process a full prompt, filling caches. Returns (logits_last, caches).
+
+    Implemented as repeated full-sequence layer forwards plus cache writes:
+    K/V (or latent / SSM state) are recomputed per layer in prefill shape
+    and written into the cache slots [0, S).  Ring caches for windowed
+    layers receive the last ``window`` positions.
+    """
+    x = _embed_inputs(cfg, params, batch, rt)
+    s_len = x.shape[1]
+    new_caches = []
+    for (pattern, reps), p_run, cache in zip(cfg.runs(), params["runs"],
+                                             caches):
+        if reps == 1:
+            cs = []
+            for spec_j, p_j, c_j in zip(pattern, p_run, cache):
+                x, c_new = _prefill_layer(p_j, x, c_j, cfg, spec_j, rt,
+                                          s_len)
+                cs.append(c_new)
+            new_caches.append(cs)
+            continue
+
+        if rt.unroll_runs:
+            outs = [[] for _ in pattern]
+            for i in range(reps):
+                for j, (spec_j, p_j, c_j) in enumerate(
+                        zip(pattern, p_run, cache)):
+                    p_i = jax.tree.map(lambda a: a[i], p_j)
+                    c_i = jax.tree.map(lambda a: a[i], c_j)
+                    x, c_new = _prefill_layer(p_i, x, c_i, cfg, spec_j, rt,
+                                              s_len)
+                    outs[j].append(c_new)
+            new_caches.append([
+                jax.tree.map(lambda *xs: jnp.stack(xs), *o) for o in outs])
+            continue
+
+        def body(h, pc):
+            ps, cs_in = pc
+            cs_out = []
+            for spec_j, p_j, c_j in zip(pattern, ps, cs_in):
+                h, c_new = _prefill_layer(p_j, h, c_j, cfg, spec_j, rt,
+                                          s_len)
+                cs_out.append(c_new)
+            return h, tuple(cs_out)
+
+        x, c = jax.lax.scan(body, x, (tuple(p_run), tuple(cache)))
+        new_caches.append(list(c))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(head, x[:, -1])
+    logits = rt.shard_activation(logits, ("batch", "vocab"))
+    logits = softcap(logits, cfg.final_softcap)
+    return logits, new_caches
+
+
+def _prefill_layer(p, x, cache, cfg, spec, rt, s_len):
+    """Layer forward that also populates the serving cache."""
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    parts = []
+    new_cache = dict(cache)
+    if spec.attn in ("gqa", "mla"):
+        if spec.attn == "gqa":
+            y = attn_mod.gqa_forward(p["attn"], h, cfg, spec, rt)
+            positions = jnp.broadcast_to(
+                jnp.arange(s_len), (h.shape[0], s_len))
+            _, k_new, v_new = attn_mod._proj_qkv(p["attn"], h, cfg,
+                                                 positions, rt)
+            slots = cache["attn"]["k"].shape[2]
+            if slots >= s_len:
+                kc = cache["attn"]["k"].at[:, :, :s_len].set(k_new)
+                vc = cache["attn"]["v"].at[:, :, :s_len].set(v_new)
+            else:  # ring: keep the trailing `slots` positions
+                tail_k = k_new[:, :, s_len - slots:]
+                tail_v = v_new[:, :, s_len - slots:]
+                # place at slot = pos % slots
+                pos = jnp.arange(s_len - slots, s_len) % slots
+                kc = cache["attn"]["k"].at[:, :, pos].set(tail_k)
+                vc = cache["attn"]["v"].at[:, :, pos].set(tail_v)
+            new_cache["attn"] = {"k": kc, "v": vc}
+        else:
+            y = attn_mod.mla_forward(p["attn"], h, cfg, spec, rt)
+            positions = jnp.broadcast_to(
+                jnp.arange(s_len), (h.shape[0], s_len))
+            _, _, ckv_new, krope_new = attn_mod._mla_qkv_latent(
+                p["attn"], h, cfg, positions)
+            new_cache["attn"] = {
+                "ckv": cache["attn"]["ckv"].at[:, :s_len].set(ckv_new),
+                "krope": cache["attn"]["krope"].at[:, :s_len].set(krope_new),
+            }
+        parts.append(y)
+    if spec.ssm is not None:
+        y, st = _prefill_ssm(p["ssm"], h, cache["ssm"], cfg, spec, rt)
+        new_cache["ssm"] = st
+        parts.append(y)
+    y = parts[0] if len(parts) == 1 else sum(parts) / len(parts)
+    if "post1" in p:
+        y = apply_norm(p["post1"], y, cfg.norm)
+    x = x + y
+    if spec.mlp != "none":
+        h2 = apply_norm(p["ln2"], x, cfg.norm)
+        y2 = mlp(p["mlp"], h2, cfg.mlp_act, rt) if spec.mlp == "dense" \
+            else moe_mod.moe_ffn(p["moe"], h2, cfg, rt)
+        if "post2" in p:
+            y2 = apply_norm(p["post2"], y2, cfg.norm)
+        x = x + y2
+    return x, new_cache
+
+
+def _prefill_ssm(p, h, state, cfg, spec, rt):
+    """Run the SSM over the prompt sequentially via its step function —
+    exact state handoff (the chunked trainer path has no state output)."""
+    if spec.ssm == "mamba":
+        step = functools.partial(ssm_mod.mamba_step, p, cfg=cfg, rt=rt)
+    elif spec.ssm == "mlstm":
+        step = functools.partial(ssm_mod.mlstm_step, p, cfg=cfg, rt=rt)
+    else:
+        step = functools.partial(ssm_mod.slstm_step, p, cfg=cfg, rt=rt)
+
+    def body(st, ht):
+        y, st = step(ht[:, None], st)
+        return st, y[:, 0]
+
+    st, ys = jax.lax.scan(body, state, jnp.moveaxis(h, 0, 1))
+    return jnp.moveaxis(ys, 0, 1), st
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,21 @@
+"""Optimizers (pure JAX, state as pytrees sharded like params)."""
+from repro.optim.adamw import adamw
+from repro.optim.adafactor import adafactor
+from repro.optim.schedule import warmup_cosine
+from repro.optim.common import Optimizer, clip_by_global_norm, global_norm
+from repro.optim.compression import (
+    ef_int8_compress, ef_topk_compress, init_error_feedback,
+)
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(f"unknown optimizer: {name}")
+
+__all__ = [
+    "Optimizer", "adafactor", "adamw", "clip_by_global_norm",
+    "ef_int8_compress", "ef_topk_compress", "global_norm",
+    "init_error_feedback", "make_optimizer", "warmup_cosine",
+]

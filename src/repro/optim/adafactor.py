@@ -1,0 +1,71 @@
+"""Adafactor (Shazeer & Stern, 2018): factored second moments.
+
+The deployment optimizer for the 400B+/671B MoE archs: AdamW's fp32
+(m, v) for 671B params is 5.4 TB — it does not fit 256×16 GB HBM, while
+Adafactor's row/column statistics are ~1/d_model the size (DESIGN.md §5).
+β1=0 (no momentum) by default, per MaxText/T5x large-model practice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.common import Optimizer
+
+
+def adafactor(decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, min_dim_factored: int = 128,
+              weight_decay: float = 0.0) -> Optimizer:
+    def factored(p) -> bool:
+        return (p.ndim >= 2 and p.shape[-1] >= min_dim_factored
+                and p.shape[-2] >= min_dim_factored)
+
+    def init(params):
+        def one(p):
+            if factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "stats": jax.tree.map(one, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        beta2 = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+        def upd(g, st, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if "vr" in st:
+                vr = beta2 * st["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * st["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                r = vr / jnp.mean(vr, axis=-1, keepdims=True)
+                u = gf / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :])
+                st_new = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * st["v"] + (1 - beta2) * g2
+                u = gf / jnp.sqrt(v)
+                st_new = {"v": v}
+            # update clipping (RMS of the step ≤ clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            p_new = p.astype(jnp.float32) - lr * u
+            if weight_decay:
+                p_new = p_new - lr * weight_decay * p.astype(jnp.float32)
+            return p_new.astype(p.dtype), st_new
+
+        out = jax.tree.map(
+            upd, grads, state["stats"], params,
+            is_leaf=lambda t: isinstance(t, dict) and ("v" in t or "vr" in t))
+        p_new = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        s_new = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return p_new, {"stats": s_new, "count": count}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,45 @@
+"""AdamW with configurable state dtype (fp32 default; bf16 for memory)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.common import Optimizer
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            step = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * step
+            return (p_new.astype(p.dtype), m_new.astype(state_dtype),
+                    v_new.astype(state_dtype))
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        # unzip the 3-tuples
+        p_new = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        m_new = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        v_new = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return p_new, {"m": m_new, "v": v_new, "count": count}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,30 @@
+"""Functional optimizer interface + gradient utilities."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """init(params) → state;  update(grads, state, params, lr) →
+    (new_params, new_state).  Everything is a pytree; states inherit the
+    parameter sharding leaf-for-leaf (ZeRO: the optimizer never sees an
+    unsharded tensor)."""
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], tuple]
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm

@@ -1,0 +1,60 @@
+"""Gradient compression with error feedback (cross-pod DCN relief).
+
+At 512+ chips the cross-pod gradient all-reduce rides DCN (~25 GB/s/host)
+rather than ICI; compressing the cross-pod leg is a standard lever.  Both
+schemes below carry an error-feedback residual so the compression bias
+vanishes over steps (Karimireddy et al., 2019):
+
+  ``ef_int8_compress``  per-tensor-scaled int8 quantization (4× on bf16,
+                        8× on fp32 wire format),
+  ``ef_topk_compress``  magnitude top-k sparsification.
+
+They are applied *inside* the step to the global gradient pytree; on a
+real multi-pod deployment the quantized representation is what crosses
+pods (pair with a shard_map reduce-scatter over "pod").  Tests verify the
+error-feedback convergence property.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_int8_compress(grads, residual):
+    """Returns (decompressed grads, new residual)."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), gf - deq
+
+    out = jax.tree.map(one, grads, residual)
+    g = jax.tree.map(lambda t: t[0], out,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    r = jax.tree.map(lambda t: t[1], out,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    return g, r
+
+
+def ef_topk_compress(grads, residual, frac: float = 0.1):
+    """Keep the top ``frac`` fraction of entries by magnitude."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        flat = gf.reshape(-1)
+        k = max(1, int(flat.size * frac))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = (jnp.abs(gf) >= thresh).astype(jnp.float32)
+        kept = gf * mask
+        return kept.astype(g.dtype), gf - kept
+
+    out = jax.tree.map(one, grads, residual)
+    g = jax.tree.map(lambda t: t[0], out,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    r = jax.tree.map(lambda t: t[1], out,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    return g, r

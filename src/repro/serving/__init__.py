@@ -1,0 +1,5 @@
+from repro.serving.engine import (
+    Request, ServeEngine, make_prefill_step, make_serve_step, sample_logits,
+)
+__all__ = ["Request", "ServeEngine", "make_prefill_step", "make_serve_step",
+           "sample_logits"]

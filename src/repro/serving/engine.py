@@ -1,0 +1,142 @@
+"""Serving engine: batched prefill/decode with ragged KV caches.
+
+``ServeEngine`` manages a fixed-capacity decode batch (continuous
+batching): requests occupy slots; each slot has its own ``kv_len``; decode
+steps run the whole batch through ``transformer.decode_step`` (the FuseMax
+split-K decode kernel handles per-slot ragged lengths in-kernel via scalar
+prefetch).  Finished slots are refilled from the queue — the standard
+production pattern (vLLM-style, dense-cache variant).
+
+``make_serve_step`` / ``make_prefill_step`` build the jit-able functions
+the launcher binds to a mesh (these are what the dry-run lowers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.model import transformer as tf
+from repro.model.layers import Runtime
+
+
+def make_serve_step(cfg: ModelConfig, rt: Runtime = Runtime()):
+    """serve_step(params, inputs, caches, kv_len) → (logits, caches).
+
+    ``inputs``: [B, 1] tokens (or [B, 1, d] embeddings); ``kv_len``: [B]
+    lengths *including* the new token.  One new token per sequence against
+    a KV cache of up to seq_len slots — the decode_* dry-run shape.
+    """
+    def serve_step(params, inputs, caches, kv_len):
+        return tf.decode_step(cfg, params, inputs, caches, kv_len, rt)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int,
+                      rt: Runtime = Runtime()):
+    def prefill_step(params, inputs, caches):
+        return tf.prefill(cfg, params, {"inputs": inputs}, caches, rt)
+
+    return prefill_step
+
+
+def sample_logits(logits: jnp.ndarray, key, temperature: float = 0.0):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # [S] int32
+    max_new_tokens: int = 16
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Continuous-batching engine over a fixed slot count.
+
+    Host-side orchestration (queueing, slot management) around the jit'd
+    prefill/decode steps.  Single-sequence prefills write into the shared
+    cache at the slot's rows; decode advances every active slot each step.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int,
+                 max_len: int, rt: Runtime = Runtime(),
+                 temperature: float = 0.0, dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.rt = rt
+        self.slots = slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.caches = tf.init_cache(cfg, slots, max_len, dtype)
+        self.kv_len = np.zeros((slots,), np.int32)
+        self.active: list[Optional[Request]] = [None] * slots
+        self.queue: list[Request] = []
+        self._decode = jax.jit(
+            lambda p, t, c, kl: tf.decode_step(cfg, p, t, c, kl, rt))
+        self.key = jax.random.PRNGKey(0)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.slots):
+            if self.active[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[i] = req
+                # prefill by streaming the prompt through decode steps for
+                # this slot (keeps a single cache layout; a batched prefill
+                # path exists via tf.prefill for offline use)
+                for t, tok in enumerate(req.prompt):
+                    self.kv_len[i] += 1
+                    toks = np.zeros((self.slots, 1), np.int32)
+                    toks[i, 0] = tok
+                    logits, self.caches = self._decode(
+                        self.params, jnp.asarray(toks), self.caches,
+                        jnp.asarray(self.kv_len))
+                req._last_logits = np.asarray(logits[i])
+
+    def step(self) -> None:
+        """One decode step for every active slot."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return
+        toks = np.zeros((self.slots, 1), np.int32)
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            logits = getattr(req, "_last_logits")
+            self.key, sub = jax.random.split(self.key)
+            nxt = int(sample_logits(jnp.asarray(logits)[None], sub,
+                                    self.temperature)[0])
+            req.generated.append(nxt)
+            toks[i, 0] = nxt
+            self.kv_len[i] += 1
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(toks), self.caches,
+            jnp.asarray(self.kv_len))
+        logits = np.asarray(logits)
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            req._last_logits = logits[i]
+            if (len(req.generated) >= req.max_new_tokens
+                    or self.kv_len[i] >= self.max_len - 1):
+                req.done = True
+                self.active[i] = None
+                self.kv_len[i] = 0
+
+    def run(self, max_steps: int = 1000) -> None:
+        steps = 0
+        while (self.queue or any(self.active)) and steps < max_steps:
+            self.step()
+            steps += 1

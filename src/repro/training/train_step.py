@@ -1,0 +1,126 @@
+"""Train-step factory: grads + clip + optimizer, microbatch accumulation.
+
+``make_train_step`` builds the jit-able step; the launcher (``launch/
+train.py``) binds it to a mesh with in/out shardings.  Distribution
+properties:
+
+  * parameters/optimizer states are consumed and produced with their
+    (FSDP+TP) shardings — ZeRO-style: no step ever materializes an
+    unsharded parameter;
+  * microbatch accumulation is a ``lax.scan`` over grad-microbatches:
+    XLA overlaps microbatch i's reduce-scatter with i+1's compute (the
+    standard compute/comm overlap trick — §Perf iterates on this);
+  * optional error-feedback gradient compression before the optimizer
+    (cross-pod DCN relief; residual lives in the train state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.model import transformer as tf
+from repro.model.layers import Runtime
+from repro.optim import (
+    Optimizer, clip_by_global_norm, ef_int8_compress, init_error_feedback,
+)
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+    ef_residual: Any = None          # error-feedback (if compression on)
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt_state, s.step, s.ef_residual), None),
+    lambda aux, ch: TrainState(*ch),
+)
+
+
+def init_train_state(cfg: ModelConfig, key, optimizer: Optimizer,
+                     rt: Runtime = Runtime(), compression: bool = False):
+    params, axes = tf.init(cfg, key, rt)
+    state = TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        step=jnp.zeros((), jnp.int32),
+        ef_residual=init_error_feedback(params) if compression else None,
+    )
+    return state, axes
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    lr_schedule: Callable,
+    rt: Runtime = Runtime(),
+    *,
+    grad_clip: float = 1.0,
+    microbatches: int = 1,
+    compression: bool = False,
+    grad_accum_dtype=jnp.float32,
+    grad_shardings=None,
+):
+    """Returns step(state, batch) → (state, metrics)."""
+
+    def loss_for(params, batch):
+        return tf.loss_fn(cfg, params, batch, rt)
+
+    grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+
+    def step(state: TrainState, batch: dict):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            # split the global batch into microbatches along dim 0 and scan
+            def reshape(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(reshape, batch)
+
+            def _constrain(t):
+                # ZeRO grad sharding: pin the accumulator to the parameter
+                # sharding so per-microbatch synchronization lowers to
+                # reduce-scatter instead of all-reduce (§Perf lever).
+                if grad_shardings is None:
+                    return t
+                return jax.tree.map(
+                    jax.lax.with_sharding_constraint, t, grad_shardings)
+
+            def body(acc, mb_i):
+                (l, m), g = grad_fn(state.params, mb_i)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(
+                    lambda a, gg: a + gg.astype(a.dtype), acc_g, g)
+                return (_constrain(acc_g), acc_l + l), None
+
+            zero_g = _constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, grad_accum_dtype), state.params))
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (zero_g, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = {"loss": loss}
+
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        ef = state.ef_residual
+        if compression:
+            grads, ef = ef_int8_compress(grads, ef)
+        lr = lr_schedule(state.step)
+        params, opt_state = optimizer.update(
+            grads, state.opt_state, state.params, lr)
+        new_state = TrainState(
+            params=params, opt_state=opt_state, step=state.step + 1,
+            ef_residual=ef)
+        metrics = dict(metrics)
+        metrics.update({"grad_norm": gnorm, "lr": lr})
+        return new_state, metrics
+
+    return step

@@ -1,0 +1,77 @@
+"""Analytical model reproduces the paper's §VI claims (within bands)."""
+import pytest
+
+from repro.analysis.accel_model import (
+    SEQLENS, WORKLOADS, attention_result, e2e_result, geomean,
+)
+
+
+def _geo(metric):
+    vals = []
+    for w in WORKLOADS.values():
+        for m in SEQLENS:
+            vals.append(metric(w, m))
+    return geomean(vals)
+
+
+def test_attention_speedup_vs_flat_band():
+    """Paper: 6.7× average attention speedup over FLAT."""
+    sp = _geo(lambda w, m: attention_result("flat", w, m).time_s
+              / attention_result("fusemax", w, m).time_s)
+    assert 5.0 <= sp <= 10.0, sp
+
+
+def test_attention_energy_vs_unfused_band():
+    """Paper: FuseMax uses 77% of the unfused baseline's energy."""
+    r = _geo(lambda w, m: attention_result("fusemax", w, m).energy_j
+             / attention_result("unfused", w, m).energy_j)
+    assert 0.6 <= r <= 0.9, r
+
+
+def test_e2e_speedup_band():
+    """Paper: 5.3× end-to-end over FLAT."""
+    sp = _geo(lambda w, m: e2e_result("flat", w, m).time_s
+              / e2e_result("fusemax", w, m).time_s)
+    assert 4.0 <= sp <= 7.0, sp
+
+
+def test_fusemax_full_utilization_all_seqlens():
+    """Paper Fig. 6: ~100% on both arrays at every sequence length."""
+    for w in WORKLOADS.values():
+        for m in SEQLENS:
+            r = attention_result("fusemax", w, m)
+            assert r.util_2d > 0.95 and r.util_1d > 0.95
+
+
+def test_baseline_2d_underutilized():
+    """Paper Fig. 6b: baselines leave the 2D array ~10-20% utilized."""
+    for name in ("unfused", "flat"):
+        r = attention_result(name, WORKLOADS["BERT"], 1 << 14)
+        assert r.util_2d < 0.25, (name, r.util_2d)
+
+
+def test_flat_degrades_at_256k():
+    """Paper Fig. 6a: FLAT's utilization drops for M ≥ 256K (spills)."""
+    w = WORKLOADS["BERT"]
+    short = attention_result("flat", w, 1 << 14)
+    long = attention_result("flat", w, 1 << 20)
+    assert long.util_1d < short.util_1d - 0.2
+    assert not long.compute_bound
+
+
+def test_fusemax_dram_independent_of_m():
+    """FuseMax DRAM traffic per element → 0; absolute traffic linear in M
+    (Q/K/V/AV only), never quadratic."""
+    w = WORKLOADS["BERT"]
+    r1 = attention_result("fusemax", w, 1 << 14)
+    r2 = attention_result("fusemax", w, 1 << 16)
+    assert r2.dram_bytes / r1.dram_bytes < 4.5   # ~4× for 4× M (linear-ish)
+
+
+def test_xlm_sees_lower_speedup():
+    """Paper §VI-B: higher intensity (E=128) ⇒ baselines do better on XLM."""
+    def sp(w):
+        return geomean([
+            attention_result("flat", w, m).time_s
+            / attention_result("fusemax", w, m).time_s for m in SEQLENS])
+    assert sp(WORKLOADS["XLM"]) < sp(WORKLOADS["BERT"])

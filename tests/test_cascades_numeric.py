@@ -1,0 +1,98 @@
+"""Property-based equivalence of the attention cascade implementations.
+
+The system invariant (paper §IV): every member of the taxonomy — 3-pass,
+3-pass+deferral, 2-pass (both divisions), 1-pass, split-K decode — computes
+the *same* attention function, for every masking/softcap configuration.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AttnSpec, attention_1pass, attention_2pass, attention_3pass,
+    attention_decode_1pass, division_counts,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def make_qkv(seed, b, h, p, m, e, f):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (b, h, p, e), jnp.float32),
+            jax.random.normal(ks[1], (b, h, m, e), jnp.float32),
+            jax.random.normal(ks[2], (b, h, m, f), jnp.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    p=st.sampled_from([1, 7, 32, 64]),
+    m_blocks=st.integers(1, 4),
+    block=st.sampled_from([16, 32, 64]),
+    e=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+    softcap=st.sampled_from([None, 10.0, 50.0]),
+    window_frac=st.sampled_from([None, 0.5, 1.5]),
+)
+def test_cascade_equivalence(seed, p, m_blocks, block, e, causal, softcap,
+                             window_frac):
+    m = m_blocks * block
+    window = None if window_frac is None else max(1, int(m * window_frac))
+    spec = AttnSpec(causal=causal, softcap=softcap, window=window)
+    q, k, v = make_qkv(seed, 1, 2, p, m, e, e)
+    ref = attention_3pass(q, k, v, spec)
+    for out in (
+        attention_3pass(q, k, v, spec, deferred_division=True),
+        attention_2pass(q, k, v, spec, block=block),
+        attention_2pass(q, k, v, spec, block=block,
+                        deferred_division=False),
+        attention_1pass(q, k, v, spec, block=block),
+    ):
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    splits=st.sampled_from([1, 2, 4, 8]),
+    m=st.sampled_from([64, 128, 256]),
+)
+def test_decode_splitk_equivalence(seed, splits, m):
+    spec = AttnSpec()
+    q, k, v = make_qkv(seed, 2, 2, 1, m, 16, 16)
+    ref = attention_3pass(q, k, v, spec)
+    out = attention_decode_1pass(q, k, v, spec, splits=splits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_extreme_logits_stay_stable():
+    """Numerical stability: the 1-pass running max handles huge logits."""
+    q, k, v = make_qkv(0, 1, 1, 8, 64, 8, 8)
+    q = q * 100.0           # logits ~ O(1e4): naive softmax would overflow
+    spec = AttnSpec()
+    ref = attention_3pass(q, k, v, spec)
+    out = attention_1pass(q, k, v, spec, block=16)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_division_counts_match_paper():
+    # §IV-D: deferral reduces divisions by M/F
+    c = division_counts(m=1 << 20, p=512, f=64)
+    assert c["eager"] == (1 << 20) * 512
+    assert c["deferred"] == 64 * 512
+    assert c["savings_factor"] == (1 << 20) // 64
+
+
+def test_q_offset_decode_window():
+    spec = AttnSpec(causal=True, window=32, q_offset=127)
+    q, k, v = make_qkv(3, 1, 2, 1, 128, 16, 16)
+    ref = attention_3pass(q, k, v, spec)
+    out = attention_1pass(q, k, v, spec, block=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)

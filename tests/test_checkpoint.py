@@ -1,0 +1,67 @@
+"""Checkpoint manager: roundtrip, async, corruption detection, resume."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import checkpoint as ckpt
+
+
+def make_tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 16)),
+                   "b": jnp.zeros((16,), jnp.bfloat16)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = make_tree()
+    ckpt.save(str(tmp_path), 42, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 42
+    restored = ckpt.restore(str(tmp_path), 42, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_latest_step_ignores_uncommitted(tmp_path):
+    tree = make_tree()
+    ckpt.save(str(tmp_path), 1, tree)
+    ckpt.save(str(tmp_path), 2, tree)
+    os.remove(os.path.join(str(tmp_path), "step_000000002", "COMMITTED"))
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_corruption_detected(tmp_path):
+    tree = make_tree()
+    path = ckpt.save(str(tmp_path), 3, tree)
+    f = os.path.join(path, "arrays", "0.bin")
+    raw = bytearray(open(f, "rb").read())
+    raw[0] ^= 0xFF
+    open(f, "wb").write(bytes(raw))
+    with pytest.raises(ValueError, match="digest"):
+        ckpt.restore(str(tmp_path), 3, tree)
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    tree = make_tree()
+    ckpt.save(str(tmp_path), 4, tree)
+    bad = {"params": {"w": jnp.zeros((4, 4)),
+                      "b": jnp.zeros((16,), jnp.bfloat16)},
+           "step": jnp.asarray(0, jnp.int32)}
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore(str(tmp_path), 4, bad)
+
+
+def test_async_save(tmp_path):
+    tree = make_tree()
+    saver = ckpt.AsyncCheckpointer(str(tmp_path))
+    saver.save_async(10, tree)
+    saver.save_async(20, tree)      # waits for the first
+    saver.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 20

@@ -1,0 +1,74 @@
+"""Fault-tolerance control plane: heartbeats, stragglers, elastic re-mesh."""
+from repro.distributed.fault_tolerance import (
+    ElasticMeshManager, HeartbeatMonitor, RecoveryLog, retry_step,
+)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_dead_worker_detected():
+    clock = FakeClock()
+    mon = HeartbeatMonitor(4, deadline_s=30, clock=clock)
+    clock.t = 10
+    for w in (0, 1, 2):
+        mon.heartbeat(w, 1.0)
+    clock.t = 35          # worker 3 (silent since t=0) past deadline;
+    res = mon.check()     # 0-2 heartbeated at t=10 → within deadline
+    assert res["dead"] == [3]
+    assert mon.alive_workers() == [0, 1, 2]
+
+
+def test_straggler_needs_persistent_strikes():
+    clock = FakeClock()
+    mon = HeartbeatMonitor(8, deadline_s=1000, straggler_sigma=3,
+                           strike_limit=3, clock=clock)
+    # one slow step is NOT enough
+    for rnd in range(2):
+        clock.t += 1
+        for w in range(8):
+            mon.heartbeat(w, 10.0 if w == 5 and rnd == 0 else 1.0)
+        mon.check()
+    assert 5 in mon.alive_workers()
+    # three consecutive outlier steps ⇒ ejected
+    for _ in range(3):
+        clock.t += 1
+        for w in range(8):
+            mon.heartbeat(w, 25.0 if w == 5 else 1.0 + 0.01 * w)
+        res = mon.check()
+    assert 5 not in mon.alive_workers()
+
+
+def test_elastic_plan_preserves_tp_groups():
+    mgr = ElasticMeshManager(model_parallel=16, devices_per_pod=256)
+    # healthy 2-pod cluster
+    plan = mgr.plan(512, n_pods=2)
+    assert plan.shape == (2, 16, 16)
+    # lose 16 devices (one TP group): data axis shrinks, TP intact
+    plan = mgr.plan(512 - 16, n_pods=2)
+    assert plan.shape[-1] == 16
+    assert plan.n_devices <= 512 - 16
+    assert plan.n_devices % 16 == 0
+    # catastrophic: fewer devices than one TP group
+    assert mgr.plan(7) is None
+
+
+def test_retry_step_recovers():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    log = RecoveryLog()
+    out = retry_step(flaky, retries=3,
+                     on_retry=lambda i, e: log.record("retry", attempt=i))
+    assert out == "ok"
+    assert len(log.events) == 2

@@ -1,0 +1,162 @@
+"""Pallas kernel sweeps: shapes × dtypes × masks vs the pure-jnp oracle.
+
+Kernels execute in interpret mode (CPU container; TPU is the target) —
+interpret mode runs the exact kernel body, so allclose here validates the
+block decomposition, running-state algebra, masks and padding logic.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import (
+    decode_reference, fusemax_attention, fusemax_decode, mha_reference,
+)
+from repro.kernels.fusemax import exp_maccs
+
+
+def mk(seed, b, hq, hkv, p, m, e, f, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (b, hq, p, e)).astype(dtype),
+            jax.random.normal(ks[1], (b, hkv, m, e)).astype(dtype),
+            jax.random.normal(ks[2], (b, hkv, m, f)).astype(dtype))
+
+
+SHAPE_SWEEP = [
+    # b, hq, hkv, p,   m,   e,  f
+    (1, 4, 4, 128, 256, 64, 64),       # MHA, aligned
+    (2, 8, 2, 64, 384, 32, 32),        # GQA group 4
+    (1, 4, 1, 100, 200, 48, 48),       # MQA, unaligned → padding
+    (1, 16, 16, 8, 512, 128, 128),     # few rows, long M
+    (1, 25, 5, 33, 192, 64, 64),       # hymba-like odd head count
+]
+
+
+@pytest.mark.parametrize("shape", SHAPE_SWEEP)
+@pytest.mark.parametrize("mask", ["none", "causal", "window", "softcap"])
+def test_fusemax_forward_sweep(shape, mask):
+    b, hq, hkv, p, m, e, f = shape
+    kw = {}
+    if mask == "causal":
+        kw["causal"] = True
+    elif mask == "window":
+        kw.update(causal=True, window=max(16, m // 3))
+    elif mask == "softcap":
+        kw["softcap"] = 30.0
+    q, k, v = mk(hash(shape) % 1000, *shape)
+    ref = mha_reference(q, k, v, **kw)
+    out = fusemax_attention(q, k, v, impl="pallas", block_q=64, block_k=128,
+                            **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype,rtol,atol", [
+    (jnp.float32, 2e-4, 3e-5),
+    (jnp.bfloat16, 3e-2, 3e-2),
+])
+def test_fusemax_dtypes(dtype, rtol, atol):
+    q, k, v = mk(1, 1, 8, 2, 64, 256, 64, 64, dtype)
+    ref = mha_reference(q, k, v, causal=True).astype(jnp.float32)
+    out = fusemax_attention(q, k, v, impl="pallas", causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               rtol=rtol, atol=atol)
+
+
+def test_fusemax_exp_maccs_path():
+    """The paper's exp-as-6-MACCs (§V, [36]) stays within 2e-5 rel err."""
+    x = jnp.linspace(-60.0, 0.0, 50001)
+    rel = jnp.abs(exp_maccs(x) - jnp.exp(x)) / jnp.maximum(jnp.exp(x), 1e-30)
+    assert float(jnp.max(rel)) < 2e-5
+    q, k, v = mk(2, 1, 4, 4, 64, 256, 32, 32)
+    ref = mha_reference(q, k, v, causal=True)
+    out = fusemax_attention(q, k, v, impl="pallas", causal=True,
+                            exp_impl="maccs")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    hkv=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    p=st.integers(1, 96),
+    m=st.sampled_from([128, 192, 320]),
+)
+def test_fusemax_property_shapes(seed, hkv, group, p, m):
+    q, k, v = mk(seed, 1, hkv * group, hkv, p, m, 32, 32)
+    ref = mha_reference(q, k, v, causal=True)
+    out = fusemax_attention(q, k, v, impl="pallas", causal=True,
+                            block_q=32, block_k=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-4, atol=5e-5)
+
+
+class TestDecode:
+    @pytest.mark.parametrize("splits", [1, 2, 8])
+    @pytest.mark.parametrize("hq,hkv", [(8, 8), (8, 2), (16, 1)])
+    def test_ragged_decode(self, splits, hq, hkv):
+        b, m, e = 4, 512, 64
+        q, k, v = mk(5, b, hq, hkv, 1, m, e, e)
+        kv_len = jax.random.randint(jax.random.PRNGKey(9), (b,), 1, m + 1)
+        ref = decode_reference(q, k, v, kv_len)
+        for impl in ("jnp", "pallas"):
+            out = fusemax_decode(q, k, v, kv_len, impl=impl, splits=splits,
+                                 block_k=128)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=2e-4, atol=3e-5)
+
+    def test_windowed_ragged(self):
+        b, m = 3, 256
+        q, k, v = mk(6, b, 4, 4, 1, m, 32, 32)
+        kv_len = jnp.asarray([17, 200, 256], jnp.int32)
+        ref = decode_reference(q, k, v, kv_len, window=64)
+        for impl in ("jnp", "pallas"):
+            out = fusemax_decode(q, k, v, kv_len, impl=impl, window=64,
+                                 splits=4, block_k=64)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=2e-4, atol=3e-5)
+
+    def test_min_length_one(self):
+        q, k, v = mk(7, 2, 4, 2, 1, 128, 32, 32)
+        kv_len = jnp.asarray([1, 1], jnp.int32)
+        ref = decode_reference(q, k, v, kv_len)
+        out = fusemax_decode(q, k, v, kv_len, impl="pallas", splits=2)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=3e-5)
+
+
+class TestTrainingPath:
+    def test_custom_vjp_matches_autodiff_oracle(self):
+        q, k, v = mk(8, 1, 4, 2, 32, 128, 32, 32)
+
+        def loss(fn):
+            return lambda q, k, v: jnp.sum(fn(q, k, v) ** 2)
+
+        flash = lambda q, k, v: fusemax_attention(
+            q, k, v, impl="jnp", causal=True, block_k=64)
+        ref = lambda q, k, v: mha_reference(q, k, v, causal=True)
+        g1 = jax.grad(loss(flash), argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(loss(ref), argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=1e-4)
+
+    def test_grad_with_window_and_softcap(self):
+        q, k, v = mk(9, 1, 2, 2, 24, 96, 16, 16)
+
+        def loss(fn):
+            return lambda q, k, v: jnp.sum(fn(q, k, v) ** 2)
+
+        flash = lambda q, k, v: fusemax_attention(
+            q, k, v, impl="jnp", causal=True, window=40, softcap=20.0,
+            block_k=32)
+        ref = lambda q, k, v: mha_reference(
+            q, k, v, causal=True, window=40, softcap=20.0)
+        g1 = jax.grad(loss(flash), argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(loss(ref), argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=1e-4)

@@ -1,0 +1,112 @@
+"""Pass-count analysis (paper §III) — the mapping-independent core claims."""
+import pytest
+
+from repro.core import (
+    Cascade, Einsum, T, analyze, attention_1pass_cascade,
+    attention_2pass_cascade, attention_3pass_cascade,
+    cascade1_two_pass_example, cascade2_deferred_multiply,
+    cascade3_iterative, count_passes, min_live_footprint, mlstm_cascade,
+)
+
+
+class TestPedagogicalCascades:
+    def test_cascade1_is_two_pass(self):
+        assert count_passes(cascade1_two_pass_example(), "K") == 2
+
+    def test_cascade2_deferral_is_one_pass(self):
+        assert count_passes(cascade2_deferred_multiply(), "K") == 1
+
+    def test_cascade3_iterative_is_one_pass(self):
+        assert count_passes(cascade3_iterative(), "K") == 1
+
+    def test_cascade1_footprint_lower_bound(self):
+        # §III-B: tensor A must keep its whole K fiber live
+        fp = min_live_footprint(cascade1_two_pass_example(), "K")
+        assert fp["A"].full_fiber
+        assert not fp["B"].full_fiber
+
+    def test_cascade2_streams_everything(self):
+        a = analyze(cascade2_deferred_multiply(), "K")
+        assert a.full_fiber_tensors() == frozenset()
+
+
+class TestAttentionTaxonomy:
+    """Paper Table I, re-derived from first principles."""
+
+    def test_three_pass(self):
+        assert count_passes(attention_3pass_cascade(), "M") == 3
+
+    def test_three_pass_with_deferral_becomes_two(self):
+        # §IV-E3: division deferral merges passes 2 and 3...
+        c = attention_3pass_cascade(deferred_division=True)
+        assert count_passes(c, "M") == 2
+
+    def test_two_pass(self):
+        assert count_passes(attention_2pass_cascade(), "M") == 2
+
+    def test_two_pass_eager_division_still_two(self):
+        # ...and is orthogonal: the 2-pass cascade stays 2-pass either way
+        c = attention_2pass_cascade(deferred_division=False)
+        assert count_passes(c, "M") == 2
+
+    def test_one_pass(self):
+        assert count_passes(attention_1pass_cascade(), "M") == 1
+
+    def test_one_pass_tile_level_is_two(self):
+        # within an M0 tile the local max forces a second visit — the
+        # footprint is O(M0), not O(M) (paper §V)
+        assert count_passes(attention_1pass_cascade(), "M0") == 2
+
+    def test_footprints_explain_flat_buffering(self):
+        # 3-pass: QK and SN must be O(M)-live (FLAT's buffer pressure)
+        a3 = analyze(attention_3pass_cascade(), "M")
+        assert {"QK", "SN"} <= a3.full_fiber_tensors()
+        # 1-pass: nothing is O(M)-live — the headline FuseMax property
+        a1 = analyze(attention_1pass_cascade(), "M")
+        assert a1.full_fiber_tensors() == frozenset()
+
+    def test_two_pass_still_buffers_sln(self):
+        a2 = analyze(attention_2pass_cascade(), "M")
+        assert "SLN" in a2.full_fiber_tensors()
+
+    def test_mlstm_natively_one_pass(self):
+        # §Arch-applicability: attention-free recurrences have no
+        # multi-pass hazard for FuseMax to remove
+        assert count_passes(mlstm_cascade(), "S") == 1
+
+
+class TestAnalysisMachinery:
+    def test_validation_rejects_use_before_def(self):
+        c = Cascade("bad")
+        c.add(Einsum(T("Z"), (T("Y"),)))
+        c.add(Einsum(T("Y"), (T("A", "K"),)))
+        with pytest.raises(Exception):
+            count_passes(c, "K")
+
+    def test_chained_reductions_accumulate(self):
+        # Y = ΣA; Z = ΣY·A; W = ΣZ·A → 3 passes over K
+        c = Cascade("chain")
+        c.add(Einsum(T("Y"), (T("A", "K"),)))
+        c.add(Einsum(T("Z"), (T("Y"), T("A", "K"))))
+        c.add(Einsum(T("W"), (T("Z"), T("A", "K"))))
+        assert count_passes(c, "K") == 3
+
+    def test_independent_reductions_share_a_pass(self):
+        c = Cascade("indep")
+        c.add(Einsum(T("Y"), (T("A", "K"),)))
+        c.add(Einsum(T("X"), (T("A", "K"), T("B", "K"))))
+        c.add(Einsum(T("Z"), (T("Y"), T("X"))))
+        assert count_passes(c, "K") == 1
+
+    def test_unrelated_rank_is_zero_passes(self):
+        assert count_passes(cascade1_two_pass_example(), "Q") == 0
+
+    def test_partition_coverage(self):
+        # a reduction over only M0 (keeping M1) is not an M barrier
+        c = Cascade("partial")
+        c.partition("M", ("M1", "M0"))
+        c.add(Einsum(T("X", "M1", "P"), (T("A", "M1", "M0"),)))
+        c.add(Einsum(T("Z", "M1", "M0"),
+                     (T("A", "M1", "M0"), T("X", "M1", "P"))))
+        assert count_passes(c, "M") == 1
+        assert count_passes(c, "M0") == 2

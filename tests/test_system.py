@@ -1,0 +1,51 @@
+"""End-to-end behaviour tests for the paper's system."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, cell_applicable, input_specs
+
+
+def test_cell_matrix_counts():
+    """40 assigned cells; long_500k applies only to sub-quadratic archs."""
+    total = sum(len(SHAPES) for _ in ARCHS)
+    assert total == 40
+    applicable = [(a, s) for a, cfg in ARCHS.items() for s in SHAPES
+                  if cell_applicable(cfg, s)]
+    assert len(applicable) == 32
+    longs = [a for a, s in applicable if s == "long_500k"]
+    assert sorted(longs) == ["hymba-1.5b", "xlstm-125m"]
+
+
+def test_input_specs_are_abstract():
+    for arch, cfg in ARCHS.items():
+        for shape in SHAPES:
+            if not cell_applicable(cfg, shape):
+                continue
+            specs = input_specs(cfg, shape)
+            for v in jax.tree.leaves(specs):
+                assert isinstance(v, jax.ShapeDtypeStruct)
+    # decode specs carry kv_len; train specs carry targets
+    s = input_specs(ARCHS["gemma2-9b"], "decode_32k")
+    assert set(s) == {"inputs", "kv_len"}
+    s = input_specs(ARCHS["gemma2-9b"], "train_4k")
+    assert "targets" in s and "loss_mask" in s
+
+
+def test_modality_stubs_feed_embeddings():
+    s = input_specs(ARCHS["musicgen-large"], "train_4k")
+    assert s["inputs"].shape == (256, 4096, 2048)     # frame embeddings
+    s = input_specs(ARCHS["pixtral-12b"], "prefill_32k")
+    assert s["inputs"].shape == (32, 32768, 5120)     # patch embeddings
+
+
+def test_quickstart_example_runs():
+    out = subprocess.run(
+        [sys.executable, "examples/quickstart.py"],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"})
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "quickstart OK" in out.stdout
