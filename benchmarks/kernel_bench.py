@@ -3,31 +3,31 @@
 Wall-clock on CPU is NOT the perf deliverable (the roofline analysis is,
 see EXPERIMENTS.md); these exist to (a) sanity-check relative costs of the
 cascade variants, (b) exercise the jit'd public ops end-to-end, and (c)
-provide a regression baseline for the repo's CI.
+provide a regression baseline for the repo's CI (``benchmarks/run.py``
+writes them to ``BENCH_kernels.json``).
+
+Timing protocol: ``warmup`` untimed calls (jit compile + caches), then the
+median of ``iters`` timed calls, each synchronized with
+``jax.block_until_ready`` so async dispatch doesn't lie.
 """
 from __future__ import annotations
-
-import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import AttnSpec, attention_1pass, attention_2pass, \
     attention_3pass
-from repro.kernels import fusemax_attention, fusemax_decode
+from repro.kernels import attention_params, decode_params, \
+    fusemax_attention, fusemax_decode
+from repro.kernels.autotune import time_fn
 
 
-def _time(fn, *args, iters: int = 5) -> float:
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6   # µs
+def _time(fn, *args, iters: int = 7, warmup: int = 2) -> float:
+    """Median wall-clock µs per call after warmup (autotune.time_fn)."""
+    return time_fn(fn, *args, iters=iters, warmup=warmup) * 1e6
 
 
-def cascade_bench() -> list:
+def cascade_bench(iters: int = 7) -> list:
     """3-pass vs 2-pass vs 1-pass numeric cascades (jit'd, CPU)."""
     rows = []
     b, h, p, m, e = 1, 4, 256, 2048, 64
@@ -48,13 +48,13 @@ def cascade_bench() -> list:
     }
     base = None
     for name, fn in fns.items():
-        us = _time(fn, q, k, v)
+        us = _time(fn, q, k, v, iters=iters)
         base = base or us
         rows.append((name, round(us, 1), f"rel={us / base:.2f}"))
     return rows
 
 
-def ops_bench() -> list:
+def ops_bench(iters: int = 7) -> list:
     """Public fusemax ops (jnp path jit'd; pallas interpret excluded from
     timing loops — interpret mode is a correctness vehicle, not perf)."""
     rows = []
@@ -63,13 +63,18 @@ def ops_bench() -> list:
     q = jax.random.normal(ks[0], (b, hq, p, e), jnp.float32)
     k = jax.random.normal(ks[1], (b, hkv, m, e), jnp.float32)
     v = jax.random.normal(ks[2], (b, hkv, m, e), jnp.float32)
+    tuned = attention_params(p * hq // hkv, m, e, e)
     fn = jax.jit(lambda q, k, v: fusemax_attention(
         q, k, v, causal=True, impl="jnp"))
-    rows.append(("ops/fusemax_attention_jnp", round(_time(fn, q, k, v), 1),
-                 f"B={b} Hq={hq} Hkv={hkv} P={p} M={m}"))
+    rows.append(("ops/fusemax_attention_jnp",
+                 round(_time(fn, q, k, v, iters=iters), 1),
+                 f"B={b} Hq={hq} Hkv={hkv} P={p} M={m} "
+                 f"autotune=bq{tuned.block_q}/bk{tuned.block_k}"))
     qd = q[:, :, :1]
     kv_len = jnp.full((b,), m, jnp.int32)
+    dtuned = decode_params(m, 8, e, e)
     fn = jax.jit(lambda q, k, v, l: fusemax_decode(q, k, v, l, impl="jnp"))
-    rows.append(("ops/fusemax_decode_jnp", round(_time(fn, qd, k, v, kv_len), 1),
-                 f"splits=8 M={m}"))
+    rows.append(("ops/fusemax_decode_jnp",
+                 round(_time(fn, qd, k, v, kv_len, iters=iters), 1),
+                 f"M={m} autotune=s{dtuned.splits}/bk{dtuned.block_k}"))
     return rows

@@ -1,26 +1,47 @@
 """Benchmark harness: one function per paper table/figure + kernel benches.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Analytical-model figures
-report their headline value in the middle column (speedup ×, utilization,
-energy ratio — unit noted in `derived`); wall-clock benches report µs.
+Prints ``name,us_per_call,derived`` CSV rows and writes the wall-clock
+kernel rows to ``BENCH_kernels.json`` so CI can track the regression
+trajectory (see EXPERIMENTS.md for how to read the files).
+
+``--smoke`` runs a reduced set (kernel benches with fewer iterations,
+no analytical paper figures) — the CI configuration.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced iteration counts, skip paper figures")
+    ap.add_argument("--json", default="BENCH_kernels.json",
+                    help="write kernel rows here ('' to disable)")
+    args = ap.parse_args(argv)
+
     t0 = time.time()
     print("name,us_per_call,derived")
-    from benchmarks.paper_figures import ALL_FIGURES
-    for fig in ALL_FIGURES:
-        for name, value, derived in fig():
-            print(f"{name},{value},{derived}")
+    if not args.smoke:
+        from benchmarks.paper_figures import ALL_FIGURES
+        for fig in ALL_FIGURES:
+            for name, value, derived in fig():
+                print(f"{name},{value},{derived}")
+
     from benchmarks.kernel_bench import cascade_bench, ops_bench
+    iters = 3 if args.smoke else 7
+    kernel_rows = {}
     for bench in (cascade_bench, ops_bench):
-        for name, value, derived in bench():
+        for name, value, derived in bench(iters=iters):
             print(f"{name},{value},{derived}")
+            kernel_rows[name] = {"us_per_call": value, "derived": derived}
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(kernel_rows, fh, indent=1)
     print(f"benchmarks/total_wall_s,{time.time() - t0:.1f},", file=sys.stderr)
 
 

@@ -1,0 +1,27 @@
+"""Serving benchmark: end-to-end engine throughput → BENCH_serving.json.
+
+Thin wrapper over ``repro.launch.serve`` (the launcher IS the benchmark:
+it reports tok/s, TTFT, steps/s and dispatch counts, and writes
+``BENCH_serving.json``).  Use this module for a programmatic run:
+
+  PYTHONPATH=src python benchmarks/serving_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from repro.launch import serve as serve_mod
+
+    argv = sys.argv[1:]
+    if "--smoke" in argv:
+        argv.remove("--smoke")
+        argv = ["--requests", "4", "--slots", "2", "--max-len", "128",
+                "--prompt-len", "8", "--new-tokens", "4",
+                "--arch", "stablelm-1.6b-smoke"] + argv
+    serve_mod.main(argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -4,16 +4,28 @@
 ``decode.py``   — split-K decode instantiation (ragged KV caches)
 ``ops.py``      — jit'd public wrappers (padding, GQA folding, dispatch,
                   differentiable custom-VJP jnp path for training/dry-run)
+``autotune.py`` — per-(shape, backend) block-size / split selection
 ``ref.py``      — pure-jnp fp32 oracles
 """
+from repro.kernels import autotune
+from repro.kernels.autotune import (
+    AttentionParams, DecodeParams, attention_params, decode_params,
+    measure_best,
+)
 from repro.kernels.fusemax import exp_maccs, fusemax_attention_pallas
 from repro.kernels.decode import fusemax_decode_pallas
 from repro.kernels.ops import fusemax_attention, fusemax_decode
 from repro.kernels.ref import decode_reference, mha_reference
 
 __all__ = [
+    "AttentionParams",
+    "DecodeParams",
+    "attention_params",
+    "autotune",
+    "decode_params",
     "decode_reference",
     "exp_maccs",
+    "measure_best",
     "fusemax_attention",
     "fusemax_attention_pallas",
     "fusemax_decode",

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.fusemax import LANES, NEG_INF, _exp
+from repro.kernels.fusemax import CompilerParams, LANES, NEG_INF, _exp
 
 
 def _decode_partials_kernel(
@@ -34,7 +34,6 @@ def _decode_partials_kernel(
     scale: float,
     softcap: Optional[float],
     window: Optional[int],
-    group: int,
     hkv: int,
     block_k: int,
     m2_total: int,
@@ -133,7 +132,6 @@ def fusemax_decode_pallas(
         scale=scale,
         softcap=softcap,
         window=window,
-        group=1,
         hkv=hkv,
         block_k=block_k,
         m2_total=m2,
@@ -173,7 +171,7 @@ def fusemax_decode_pallas(
             jax.ShapeDtypeStruct((bh, splits, g, LANES), jnp.float32),
             jax.ShapeDtypeStruct((bh, splits, g, f), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

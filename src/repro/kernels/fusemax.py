@@ -42,6 +42,11 @@ NEG_INF = -1e30
 LANES = 128          # TPU lane width: scratch kept (block_q, LANES)
 LOG2E = 1.4426950408889634
 
+# jax renamed TPUCompilerParams → CompilerParams across 0.4.x releases;
+# support both so the kernels run on the baked-in toolchain.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
 # Taylor coefficients of 2^f = exp(f·ln2) on f ∈ [0, 1): ln2^k / k!.
 # Six multiply-accumulates via Horner — the paper's exp-on-the-MACC-array
 # trick ([36]); max rel. error ≈ 1.4e-5 on [0,1).
@@ -93,7 +98,6 @@ def _fusemax_kernel(
     block_k: int,
     m1_total: int,
     m_valid: int,
-    p_valid: int,
     exp_impl: str,
 ):
     p1 = pl.program_id(1)
@@ -187,18 +191,22 @@ def fusemax_attention_pallas(
     block_q: int = 128,
     block_k: int = 128,
     m_valid: Optional[int] = None,
-    p_valid: Optional[int] = None,
     exp_impl: str = "native",
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Raw pallas_call wrapper. Shapes must already be block-aligned
-    (see :func:`repro.kernels.ops.fusemax_attention` for the public API)."""
+    (see :func:`repro.kernels.ops.fusemax_attention` for the public API).
+
+    Query-side padding (PG rounded up to ``block_q``) needs no kernel-side
+    validity bound: padded rows are < one tile, their logits are fully
+    masked by ``m_valid``/causal masks only when real, and the caller
+    slices ``[:, :pg]`` — so no ``p_valid`` parameter exists.
+    """
     bh, pg, e = q.shape
     _, mp, f = v.shape
     if pg % block_q or mp % block_k:
         raise ValueError(f"unaligned: PG={pg}%{block_q}, M={mp}%{block_k}")
     m_valid = mp if m_valid is None else m_valid
-    p_valid = pg if p_valid is None else p_valid
     grid = (bh, pg // block_q, mp // block_k)
 
     kernel = functools.partial(
@@ -213,7 +221,6 @@ def fusemax_attention_pallas(
         block_k=block_k,
         m1_total=grid[2],
         m_valid=m_valid,
-        p_valid=p_valid,
         exp_impl=exp_impl,
     )
 
@@ -232,7 +239,7 @@ def fusemax_attention_pallas(
             pltpu.VMEM((block_q, LANES), jnp.float32),   # RD
             pltpu.VMEM((block_q, f), jnp.float32),       # RNV
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -25,7 +25,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref as _ref
+from repro.kernels import autotune, ref as _ref
 from repro.kernels.decode import fusemax_decode_pallas
 from repro.kernels.fusemax import NEG_INF, fusemax_attention_pallas
 
@@ -238,13 +238,17 @@ def fusemax_attention(
     scale: Optional[float] = None,
     q_offset: int = 0,
     impl: str = "auto",
-    block_q: int = 128,
-    block_k: int = 128,
+    block_q: Optional[int] = None,
+    block_k: Optional[int] = None,
     exp_impl: str = "native",
     interpret: Optional[bool] = None,
     unroll_scan: bool = False,
 ) -> jnp.ndarray:
-    """FuseMax attention (1-pass cascade, deferred division)."""
+    """FuseMax attention (1-pass cascade, deferred division).
+
+    ``block_q`` / ``block_k`` left as ``None`` are resolved by the
+    autotuner (:mod:`repro.kernels.autotune`) per (shape, backend).
+    """
     b, hq, p, e = q.shape
     _, hkv, m, f = v.shape
     if hq % hkv:
@@ -254,6 +258,12 @@ def fusemax_attention(
 
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "jnp"
+
+    if block_q is None or block_k is None:
+        tuned = autotune.attention_params(
+            p * group, m, e, f, backend=jax.default_backend(), impl=impl)
+        block_q = tuned.block_q if block_q is None else block_q
+        block_k = tuned.block_k if block_k is None else block_k
 
     if impl == "ref":
         return _ref.mha_reference(
@@ -309,7 +319,7 @@ def fusemax_attention(
         scale=scale, causal=causal, window=window, softcap=softcap,
         q_offset=q_offset, group=group,
         block_q=block_q, block_k=block_k_eff,
-        m_valid=m, p_valid=pg, exp_impl=exp_impl, interpret=interpret,
+        m_valid=m, exp_impl=exp_impl, interpret=interpret,
     )
     out = out[:, :pg]
     return (
@@ -367,24 +377,35 @@ def fusemax_decode(
     window: Optional[int] = None,
     scale: Optional[float] = None,
     impl: str = "auto",
-    splits: int = 8,
-    block_k: int = 256,
+    splits: Optional[int] = None,
+    block_k: Optional[int] = None,
     exp_impl: str = "native",
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """Single-token decode against a ragged KV cache (split-K FuseMax)."""
+    """Single-token decode against a ragged KV cache (split-K FuseMax).
+
+    ``splits`` / ``block_k`` left as ``None`` are resolved by the
+    autotuner per (cache length, backend).
+    """
     b, hq, p, e = q.shape
     _, hkv, m, f = v.shape
     if p != 1:
         raise ValueError("decode expects exactly one query token")
     group = hq // hkv
     scale = scale if scale is not None else 1.0 / (e ** 0.5)
+
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+
+    if splits is None or block_k is None:
+        tuned = autotune.decode_params(
+            m, max(group, 8), e, f, backend=jax.default_backend(), impl=impl)
+        splits = tuned.splits if splits is None else splits
+        block_k = tuned.block_k if block_k is None else block_k
     splits = max(1, min(splits, m // min(m, block_k)))
     while m % splits:
         splits -= 1
 
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "jnp"
     if impl == "ref":
         return _ref.decode_reference(
             q, k, v, kv_len, softcap=softcap, window=window, scale=scale)

@@ -2,10 +2,16 @@
 
   python -m repro.launch.serve --arch gemma2-9b-smoke --requests 6 \
       --slots 4 --max-len 256
+
+Runs the device-resident fast path (batched prefill + fused multi-step
+decode) and writes ``BENCH_serving.json`` — tok/s, time-to-first-token,
+steps/s and dispatch counts — so the serving perf trajectory is tracked
+across PRs (see EXPERIMENTS.md).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -15,10 +21,65 @@ import numpy as np
 from repro.configs import get_config
 from repro.model import transformer as tf
 from repro.model.layers import Runtime
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import (
+    Request, ServeEngine, enable_compilation_cache,
+)
 
 
-def main() -> None:
+def serve_bench(args) -> dict:
+    """Build an engine, serve the synthetic trace, return the metrics."""
+    cfg = get_config(args.arch)
+    rt = Runtime(activation_dtype=jnp.float32, param_dtype=jnp.float32)
+    params, _ = tf.init(cfg, jax.random.PRNGKey(args.seed), rt)
+    engine = ServeEngine(cfg, params, slots=args.slots,
+                         max_len=args.max_len, rt=rt,
+                         temperature=args.temperature,
+                         decode_chunk=args.decode_chunk,
+                         prefill_chunk=args.prefill_chunk)
+    warmup_s = None
+    if not args.no_warmup:
+        warmup_s = round(engine.warmup(args.prompt_len), 4)
+
+    rng = np.random.default_rng(args.seed)
+    t0 = time.perf_counter()
+    reqs = []
+    for rid in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab, size=(args.prompt_len,))
+        req = Request(rid=rid, prompt=prompt.astype(np.int32),
+                      max_new_tokens=args.new_tokens)
+        reqs.append(req)
+        engine.submit(req)
+    engine.run()
+    dt = time.perf_counter() - t0
+
+    total_new = sum(len(r.generated) for r in reqs)
+    ttfts = [r.ttft for r in reqs if r.ttft is not None]
+    return {
+        "arch": args.arch,
+        "requests": args.requests,
+        "slots": args.slots,
+        "prompt_len": args.prompt_len,
+        "new_tokens": args.new_tokens,
+        "decode_chunk": args.decode_chunk,
+        "warmup_s": warmup_s,
+        "wall_s": round(dt, 4),
+        "tok_per_s": round(total_new / dt, 2),
+        "ttft_s": {
+            "mean": round(float(np.mean(ttfts)), 4) if ttfts else None,
+            "p50": round(float(np.median(ttfts)), 4) if ttfts else None,
+            "max": round(float(np.max(ttfts)), 4) if ttfts else None,
+        },
+        "steps_per_s": round(engine.stats["decode_steps"] / dt, 2),
+        "dispatches": {
+            "prefill": engine.stats["prefill_dispatches"],
+            "decode": engine.stats["decode_dispatches"],
+            "decode_steps": engine.stats["decode_steps"],
+        },
+        "tokens_decoded": engine.stats["tokens_decoded"],
+    }
+
+
+def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma2-9b-smoke")
     ap.add_argument("--requests", type=int, default=6)
@@ -28,27 +89,34 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    ap.add_argument("--decode-chunk", type=int, default=16,
+                    help="tokens decoded per fused device dispatch")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="split prompts into chunks of this many tokens "
+                         "inside the prefill dispatch (bounds activations)")
+    ap.add_argument("--json", default="BENCH_serving.json",
+                    help="write metrics here ('' to disable)")
+    ap.add_argument("--no-compile-cache", action="store_true",
+                    help="skip the persistent XLA compilation cache")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip the deploy-time engine warmup (cold-start "
+                         "costs then land in the timed trace)")
+    args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    rt = Runtime(activation_dtype=jnp.float32, param_dtype=jnp.float32)
-    params, _ = tf.init(cfg, jax.random.PRNGKey(args.seed), rt)
-    engine = ServeEngine(cfg, params, slots=args.slots,
-                         max_len=args.max_len, rt=rt,
-                         temperature=args.temperature)
-
-    rng = np.random.default_rng(args.seed)
-    t0 = time.time()
-    for rid in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab, size=(args.prompt_len,))
-        engine.submit(Request(rid=rid, prompt=prompt.astype(np.int32),
-                              max_new_tokens=args.new_tokens))
-    engine.run()
-    dt = time.time() - t0
-    total_new = args.requests * args.new_tokens
-    print(f"served {args.requests} requests "
-          f"({total_new} new tokens) in {dt:.2f}s "
-          f"→ {total_new / dt:.1f} tok/s ({args.slots} slots)")
+    if not args.no_compile_cache:
+        enable_compilation_cache()
+    metrics = serve_bench(args)
+    print(f"served {metrics['requests']} requests "
+          f"({metrics['tokens_decoded']} new tokens) in "
+          f"{metrics['wall_s']:.2f}s → {metrics['tok_per_s']:.1f} tok/s "
+          f"({metrics['slots']} slots, "
+          f"{metrics['dispatches']['decode']} decode dispatches, "
+          f"{metrics['dispatches']['prefill']} prefill dispatches, "
+          f"TTFT p50 {metrics['ttft_s']['p50']}s)")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(metrics, fh, indent=1)
+    return metrics
 
 
 if __name__ == "__main__":

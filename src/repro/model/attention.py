@@ -97,6 +97,58 @@ def gqa_init_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def gqa_prefill_chunk(
+    p, x: jnp.ndarray, cache: dict, off: int,
+    cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
+) -> tuple[jnp.ndarray, dict]:
+    """Chunked-prefill continuation: queries [off, off+S) attend the cached
+    history plus the chunk itself, and the chunk's K/V are written into the
+    cache.  ``off`` is a static chunk offset (positions [0, off) must
+    already be cached).  x: [B, S, d]."""
+    b, s_len, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(off, off + s_len), (b, s_len))
+    q, k_new, v_new = _proj_qkv(p, x, cfg, positions, rt)
+    kc, vc = cache["k"], cache["v"]
+    slots = kc.shape[2]
+
+    if spec.window is None:
+        kc = kc.at[:, :, off:off + s_len].set(k_new)
+        vc = vc.at[:, :, off:off + s_len].set(v_new)
+        out = fusemax_attention(
+            q, kc[:, :, :off + s_len], vc[:, :, :off + s_len],
+            causal=cfg.causal, softcap=cfg.attn_softcap, q_offset=off,
+            impl=rt.attn_impl, block_q=rt.block_q, block_k=rt.block_k,
+            exp_impl=rt.exp_impl, interpret=rt.interpret,
+            unroll_scan=rt.unroll_runs,
+        )
+    else:
+        # ring cache (slots == window): gather the still-needed history
+        # band [klo, off) *before* overwriting ring slots with the chunk.
+        w = spec.window
+        klo = max(0, off - w + 1)
+        hist = jnp.arange(klo, off)
+        k_band = jnp.concatenate([kc[:, :, hist % slots], k_new], axis=2)
+        v_band = jnp.concatenate([vc[:, :, hist % slots], v_new], axis=2)
+        out = fusemax_attention(
+            q, k_band, v_band,
+            causal=cfg.causal, window=w, softcap=cfg.attn_softcap,
+            q_offset=off - klo,
+            impl=rt.attn_impl, block_q=rt.block_q, block_k=rt.block_k,
+            exp_impl=rt.exp_impl, interpret=rt.interpret,
+            unroll_scan=rt.unroll_runs,
+        )
+        if s_len >= slots:          # chunk alone wraps the ring: keep tail
+            pos = jnp.arange(off + s_len - slots, off + s_len) % slots
+            kc = kc.at[:, :, pos].set(k_new[:, :, -slots:])
+            vc = vc.at[:, :, pos].set(v_new[:, :, -slots:])
+        else:
+            pos = jnp.arange(off, off + s_len) % slots
+            kc = kc.at[:, :, pos].set(k_new)
+            vc = vc.at[:, :, pos].set(v_new)
+    y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
+    return y, {"k": kc, "v": vc}
+
+
 def gqa_decode(
     p, x: jnp.ndarray, cache: dict, kv_len: jnp.ndarray,
     cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
@@ -221,6 +273,49 @@ def mla_forward(
     )
     out = rt.shard_activation(out, ("batch", "heads", "seq", "head_dim"))
     return jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(dt))
+
+
+def mla_prefill_chunk(
+    p, x: jnp.ndarray, cache: dict, off: int,
+    cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
+) -> tuple[jnp.ndarray, dict]:
+    """Chunked-prefill continuation for MLA: the chunk's latents are written
+    at [off, off+S) and queries attend the full cached prefix (expanded
+    per-head, prefill form).
+
+    Limitation: the prefix is re-expanded to per-head K/V every chunk, so
+    for MLA layers ``prefill_chunk`` bounds neither peak activations nor
+    total work (GQA layers do get both).  An absorbed-form chunk prefill
+    (latent-space scores, as in :func:`mla_decode`) would fix this —
+    future work."""
+    m = cfg.mla
+    b, s_len, _ = x.shape
+    dt = x.dtype
+    positions = jnp.broadcast_to(jnp.arange(off, off + s_len), (b, s_len))
+    q_nope, q_rope, ckv_new, krope_new = _mla_qkv_latent(p, x, cfg, positions)
+    ckv = cache["ckv"].at[:, off:off + s_len].set(ckv_new)
+    krope = cache["krope"].at[:, off:off + s_len].set(krope_new)
+
+    tot = off + s_len
+    h = cfg.n_heads
+    k_nope = jnp.einsum("bsr,rhe->bhse", ckv[:, :tot], p["w_uk"].astype(dt))
+    v = jnp.einsum("bsr,rhe->bhse", ckv[:, :tot], p["w_uv"].astype(dt))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope,
+         jnp.broadcast_to(krope[:, None, :tot], (b, h, tot, m.rope_dim))],
+        axis=-1,
+    )
+    out = fusemax_attention(
+        q, k, v,
+        causal=cfg.causal, softcap=cfg.attn_softcap,
+        scale=1.0 / math.sqrt(m.nope_dim + m.rope_dim), q_offset=off,
+        impl=rt.attn_impl, block_q=rt.block_q, block_k=rt.block_k,
+        exp_impl=rt.exp_impl, interpret=rt.interpret,
+        unroll_scan=rt.unroll_runs,
+    )
+    y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(dt))
+    return y, {"ckv": ckv, "krope": krope}
 
 
 def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:

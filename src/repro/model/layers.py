@@ -37,16 +37,19 @@ class Runtime:
 
     attn_impl: str = "jnp"      # "jnp" | "pallas" | "ref"
     exp_impl: str = "native"    # "native" | "maccs"
-    block_q: int = 128
-    block_k: int = 128
+    #: kernel tile sizes; None → per-(shape, backend) autotuner defaults
+    #: (repro.kernels.autotune)
+    block_q: Optional[int] = None
+    block_k: Optional[int] = None
     interpret: Optional[bool] = None
     param_dtype: Any = jnp.float32
     activation_dtype: Any = jnp.bfloat16
     #: unroll scanned layer runs (dry-run: makes cost_analysis FLOPs exact)
     unroll_runs: bool = False
-    #: split-K factor for decode (align with the model-axis size when the
-    #: KV cache is sequence-sharded → distributed split-K decode)
-    decode_splits: int = 8
+    #: split-K factor for decode; None → autotuned (align with the
+    #: model-axis size when the KV cache is sequence-sharded →
+    #: distributed split-K decode)
+    decode_splits: Optional[int] = None
     # activation-sharding hook installed by the distributed layer; takes
     # (x, logical_axes) and returns x (identity by default).
     shard_activation: Callable = staticmethod(lambda x, axes: x)

@@ -426,13 +426,19 @@ def decode_step(cfg: ModelConfig, params, token_or_embed, caches,
 
 
 def prefill(cfg: ModelConfig, params, batch: dict, caches,
-            rt: Runtime = Runtime()):
-    """Process a full prompt, filling caches. Returns (logits_last, caches).
+            rt: Runtime = Runtime(), kv_offset: int = 0):
+    """Process a prompt (or prompt chunk), filling caches.  Returns
+    (logits_last, caches).
 
     Implemented as repeated full-sequence layer forwards plus cache writes:
     K/V (or latent / SSM state) are recomputed per layer in prefill shape
-    and written into the cache slots [0, S).  Ring caches for windowed
-    layers receive the last ``window`` positions.
+    and written into the cache slots [kv_offset, kv_offset+S).  Ring caches
+    for windowed layers receive the last ``window`` positions.
+
+    ``kv_offset`` (a static int) enables *chunked* prefill: positions
+    [0, kv_offset) must already be cached, and the chunk's queries attend
+    the cached history (full caches via q_offset; ring caches via a
+    gathered band).  SSM state continues from the cache automatically.
     """
     x = _embed_inputs(cfg, params, batch, rt)
     s_len = x.shape[1]
@@ -443,7 +449,7 @@ def prefill(cfg: ModelConfig, params, batch: dict, caches,
             cs = []
             for spec_j, p_j, c_j in zip(pattern, p_run, cache):
                 x, c_new = _prefill_layer(p_j, x, c_j, cfg, spec_j, rt,
-                                          s_len)
+                                          s_len, kv_offset)
                 cs.append(c_new)
             new_caches.append(cs)
             continue
@@ -456,7 +462,7 @@ def prefill(cfg: ModelConfig, params, batch: dict, caches,
                     p_i = jax.tree.map(lambda a: a[i], p_j)
                     c_i = jax.tree.map(lambda a: a[i], c_j)
                     x, c_new = _prefill_layer(p_i, x, c_i, cfg, spec_j, rt,
-                                              s_len)
+                                              s_len, kv_offset)
                     outs[j].append(c_new)
             new_caches.append([
                 jax.tree.map(lambda *xs: jnp.stack(xs), *o) for o in outs])
@@ -467,7 +473,7 @@ def prefill(cfg: ModelConfig, params, batch: dict, caches,
             cs_out = []
             for spec_j, p_j, c_j in zip(pattern, ps, cs_in):
                 h, c_new = _prefill_layer(p_j, h, c_j, cfg, spec_j, rt,
-                                          s_len)
+                                          s_len, kv_offset)
                 cs_out.append(c_new)
             return h, tuple(cs_out)
 
@@ -481,13 +487,19 @@ def prefill(cfg: ModelConfig, params, batch: dict, caches,
     return logits, new_caches
 
 
-def _prefill_layer(p, x, cache, cfg, spec, rt, s_len):
-    """Layer forward that also populates the serving cache."""
+def _prefill_layer(p, x, cache, cfg, spec, rt, s_len, kv_offset=0):
+    """Layer forward that also populates the serving cache.  With
+    ``kv_offset > 0`` (chunked-prefill continuation) attention layers
+    attend the cached history via the ``*_prefill_chunk`` paths; SSM
+    layers continue from the cached state either way."""
     h = apply_norm(p["ln1"], x, cfg.norm)
     parts = []
     new_cache = dict(cache)
-    if spec.attn in ("gqa", "mla"):
-        if spec.attn == "gqa":
+    if spec.attn == "gqa":
+        if kv_offset:
+            y, new_cache["attn"] = attn_mod.gqa_prefill_chunk(
+                p["attn"], h, cache["attn"], kv_offset, cfg, spec, rt)
+        else:
             y = attn_mod.gqa_forward(p["attn"], h, cfg, spec, rt)
             positions = jnp.broadcast_to(
                 jnp.arange(s_len), (h.shape[0], s_len))
@@ -505,6 +517,11 @@ def _prefill_layer(p, x, cache, cfg, spec, rt, s_len):
                 kc = cache["attn"]["k"].at[:, :, pos].set(tail_k)
                 vc = cache["attn"]["v"].at[:, :, pos].set(tail_v)
             new_cache["attn"] = {"k": kc, "v": vc}
+        parts.append(y)
+    elif spec.attn == "mla":
+        if kv_offset:
+            y, new_cache["attn"] = attn_mod.mla_prefill_chunk(
+                p["attn"], h, cache["attn"], kv_offset, cfg, spec, rt)
         else:
             y = attn_mod.mla_forward(p["attn"], h, cfg, spec, rt)
             positions = jnp.broadcast_to(
@@ -550,6 +567,86 @@ def _prefill_ssm(p, h, state, cfg, spec, rt):
 
     st, ys = jax.lax.scan(body, state, jnp.moveaxis(h, 0, 1))
     return jnp.moveaxis(ys, 0, 1), st
+
+
+def scatter_cache_slots(cfg: ModelConfig, caches, sub, slot_ids):
+    """Write ``sub`` (a batch=N cache tree from :func:`init_cache`) into
+    batch rows ``slot_ids`` ([N] int32) of ``caches``.
+
+    The batch axis position varies per leaf (stacked runs carry a leading
+    "layers" axis) — it is located via :func:`cache_axes`.  jit-safe; used
+    by the serving engine to land batched prefills in their slots.
+    """
+    axes = cache_axes(cfg)
+    is_ax = lambda t: isinstance(t, tuple)
+    leaves_c, treedef = jax.tree.flatten(caches)
+    leaves_s = jax.tree.leaves(sub)
+    leaves_a = jax.tree.leaves(axes, is_leaf=is_ax)
+    if not (len(leaves_c) == len(leaves_s) == len(leaves_a)):
+        raise ValueError("cache / sub-cache / axes trees do not match")
+
+    def put(dst, src, ax):
+        b = ax.index("batch")
+        d = jnp.moveaxis(dst, b, 0)
+        s = jnp.moveaxis(src, b, 0)
+        return jnp.moveaxis(d.at[slot_ids].set(s.astype(d.dtype)), 0, b)
+
+    out = [put(c, s, a) for c, s, a in zip(leaves_c, leaves_s, leaves_a)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def decode_loop(cfg: ModelConfig, params, caches, kv_len, last_logits,
+                remaining, key, *, n_steps: int, rt: Runtime = Runtime(),
+                temperature: float = 0.0):
+    """Fused multi-step decode: one dispatch advances every slot by up to
+    ``n_steps`` tokens, sampling on-device.
+
+    Per step (matching the engine's per-token order): sample the next token
+    from ``last_logits``, advance ``kv_len`` for active slots, run
+    :func:`decode_step`, and decrement ``remaining``.  Slots with
+    ``remaining <= 0`` are masked — their kv_len, logits and token stream
+    freeze (cache rows may be clobbered but are reset at re-admission).
+
+    Returns ``(tokens [n_steps, B], caches, kv_len, last_logits, remaining,
+    key, steps)`` where ``steps`` is the number of iterations actually
+    executed — a ``lax.while_loop`` exits early once every slot's budget is
+    spent, so ``n_steps`` can be a generous (jit-key-stable) upper bound
+    without paying for masked tail steps.  Greedy (``temperature <= 0``)
+    token streams are bit-identical to per-token :func:`decode_step`
+    calls; sampled streams draw one key per step via ``jax.random.split``.
+    """
+    b = kv_len.shape[0]
+    toks0 = jnp.zeros((n_steps, b), jnp.int32)
+
+    def cond(state):
+        i, _, _, _, remaining, _, _ = state
+        return (i < n_steps) & jnp.any(remaining > 0)
+
+    def body(state):
+        i, caches, kv_len, logits, remaining, key, toks = state
+        active = remaining > 0
+        if temperature <= 0.0:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(
+                sub, logits / temperature, axis=-1).astype(jnp.int32)
+        nxt = jnp.where(active, nxt, 0)
+        toks = jax.lax.dynamic_update_index_in_dim(toks, nxt, i, 0)
+        kv_new = kv_len + active.astype(jnp.int32)
+        new_logits, caches = decode_step(cfg, params, nxt[:, None], caches,
+                                         kv_new, rt)
+        logits = jnp.where(active[:, None],
+                           new_logits.astype(logits.dtype), logits)
+        return (i + 1, caches, kv_new, logits,
+                remaining - active.astype(jnp.int32), key, toks)
+
+    steps, caches, kv_len, logits, remaining, key, toks = \
+        jax.lax.while_loop(
+            cond, body,
+            (jnp.asarray(0, jnp.int32), caches, kv_len, last_logits,
+             remaining, key, toks0))
+    return toks, caches, kv_len, logits, remaining, key, steps
 
 
 def param_count(params) -> int:

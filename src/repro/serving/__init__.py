@@ -1,5 +1,7 @@
 from repro.serving.engine import (
-    Request, ServeEngine, make_prefill_step, make_serve_step, sample_logits,
+    Request, ServeEngine, enable_compilation_cache, make_decode_loop,
+    make_prefill_step, make_serve_step, sample_logits,
 )
-__all__ = ["Request", "ServeEngine", "make_prefill_step", "make_serve_step",
+__all__ = ["Request", "ServeEngine", "enable_compilation_cache",
+           "make_decode_loop", "make_prefill_step", "make_serve_step",
            "sample_logits"]

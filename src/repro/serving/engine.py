@@ -1,18 +1,42 @@
-"""Serving engine: batched prefill/decode with ragged KV caches.
+"""Serving engine: device-resident batched prefill + fused multi-step decode.
 
 ``ServeEngine`` manages a fixed-capacity decode batch (continuous
 batching): requests occupy slots; each slot has its own ``kv_len``; decode
-steps run the whole batch through ``transformer.decode_step`` (the FuseMax
-split-K decode kernel handles per-slot ragged lengths in-kernel via scalar
-prefetch).  Finished slots are refilled from the queue — the standard
-production pattern (vLLM-style, dense-cache variant).
+runs the whole batch through the fused ``transformer.decode_loop`` (the
+FuseMax split-K decode kernel handles per-slot ragged lengths in-kernel via
+scalar prefetch).  Finished slots are refilled from the queue — the
+standard production pattern (vLLM-style, dense-cache variant).
 
-``make_serve_step`` / ``make_prefill_step`` build the jit-able functions
-the launcher binds to a mesh (these are what the dry-run lowers).
+The hot path is device-resident end-to-end:
+
+  * **Batched chunked prefill** — admitted prompts are grouped by length
+    and written into their slots' cache rows with ONE jit'd call per group
+    (``tf.prefill`` into a fresh mini-cache + ``tf.scatter_cache_slots``),
+    so prefill dispatch count is independent of prompt length.  Long
+    prompts are processed in ``prefill_chunk``-sized pieces *inside* the
+    same jit'd call (``kv_offset`` continuation) to bound activation
+    memory.
+  * **Fused multi-step decode** — one jit'd ``lax.while_loop`` (with
+    on-device early exit once every slot's budget is spent) samples,
+    appends to the cache, and advances ``kv_len`` for up to
+    ``decode_chunk`` tokens per dispatch; caches and per-slot state are
+    donated so no per-step copy survives (donation is a no-op on CPU).
+  * Host work per decode dispatch is one small transfer (the [N, slots]
+    token block) plus queue bookkeeping.
+
+Greedy (temperature=0) token streams are bit-identical to the per-token
+reference path (prompt streamed through ``decode_step``): slots are
+independent through every layer, and the fused loop replays the exact
+per-step sampling/advance order.
+
+``make_serve_step`` / ``make_prefill_step`` / ``make_decode_loop`` build
+the jit-able functions the launcher binds to a mesh (these are what the
+dry-run lowers).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Optional
 
 import jax
@@ -20,8 +44,39 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels.autotune import next_pow2
 from repro.model import transformer as tf
 from repro.model.layers import Runtime
+
+
+def enable_compilation_cache(path: Optional[str] = None) -> Optional[str]:
+    """Point jax at a persistent compilation cache so serving cold-starts
+    amortize XLA compiles across processes (standard deployment practice;
+    works on CPU/GPU/TPU backends).  Honors ``REPRO_JAX_CACHE_DIR``; set it
+    to "" to disable.  Returns the cache dir (or None if disabled)."""
+    import os
+
+    if path is None:
+        # repo-local when running from a source checkout
+        # (…/src/repro/serving/engine.py → repo root); site installs land
+        # in a user cache dir instead of inside site-packages
+        root = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+        if os.path.isdir(os.path.join(root, ".git")):
+            default = os.path.join(root, ".jax_cache")
+        else:
+            default = os.path.join(
+                os.path.expanduser("~"), ".cache", "repro", "jax")
+        path = os.environ.get("REPRO_JAX_CACHE_DIR", default)
+    if not path:
+        return None
+    try:
+        jax.config.update("jax_compilation_cache_dir", path)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except Exception:
+        return None
+    return path
 
 
 def make_serve_step(cfg: ModelConfig, rt: Runtime = Runtime()):
@@ -45,6 +100,17 @@ def make_prefill_step(cfg: ModelConfig, max_len: int,
     return prefill_step
 
 
+def make_decode_loop(cfg: ModelConfig, n_steps: int,
+                     rt: Runtime = Runtime(), temperature: float = 0.0):
+    """Fused N-token decode loop (see :func:`transformer.decode_loop`)."""
+    def loop(params, caches, kv_len, last_logits, remaining, key):
+        return tf.decode_loop(cfg, params, caches, kv_len, last_logits,
+                              remaining, key, n_steps=n_steps, rt=rt,
+                              temperature=temperature)
+
+    return loop
+
+
 def sample_logits(logits: jnp.ndarray, key, temperature: float = 0.0):
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -58,85 +124,223 @@ class Request:
     max_new_tokens: int = 16
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    ttft: Optional[float] = None       # seconds, submit → first token known
 
 
 class ServeEngine:
     """Continuous-batching engine over a fixed slot count.
 
-    Host-side orchestration (queueing, slot management) around the jit'd
-    prefill/decode steps.  Single-sequence prefills write into the shared
-    cache at the slot's rows; decode advances every active slot each step.
+    Host-side orchestration (queueing, slot management) around two jit'd
+    device programs: slot-batched prefill and the fused multi-step decode
+    loop.  ``stats`` counts device dispatches so callers can assert the
+    dispatch economics (prefill dispatches independent of prompt length;
+    decode dispatches ≈ tokens / decode_chunk).
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int,
                  max_len: int, rt: Runtime = Runtime(),
-                 temperature: float = 0.0, dtype=jnp.float32):
+                 temperature: float = 0.0, dtype=jnp.float32,
+                 decode_chunk: int = 16,
+                 prefill_chunk: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.rt = rt
         self.slots = slots
         self.max_len = max_len
         self.temperature = temperature
+        self.decode_chunk = max(1, decode_chunk)
+        self.prefill_chunk = None if prefill_chunk is None \
+            else max(1, prefill_chunk)
+        self.cache_dtype = dtype
         self.caches = tf.init_cache(cfg, slots, max_len, dtype)
+        # host mirrors of per-slot state (device copies live in _kv_len &c)
         self.kv_len = np.zeros((slots,), np.int32)
+        self.remaining = np.zeros((slots,), np.int32)
         self.active: list[Optional[Request]] = [None] * slots
         self.queue: list[Request] = []
-        self._decode = jax.jit(
-            lambda p, t, c, kl: tf.decode_step(cfg, p, t, c, kl, rt))
         self.key = jax.random.PRNGKey(0)
+        self._kv_len = jnp.zeros((slots,), jnp.int32)
+        self._remaining = jnp.zeros((slots,), jnp.int32)
+        self._last_logits = jnp.zeros((slots, cfg.vocab), jnp.float32)
+        self._prefill_fns: dict[tuple, Callable] = {}
+        self._loop_fns: dict[int, Callable] = {}
+        self.stats = {"prefill_dispatches": 0, "decode_dispatches": 0,
+                      "decode_steps": 0, "tokens_decoded": 0}
+
+    # -- jit caches ---------------------------------------------------------
+
+    def _donate(self, argnums):
+        # buffer donation is unimplemented on CPU and warns per call
+        return argnums if jax.default_backend() != "cpu" else ()
+
+    def _get_prefill(self, n: int, s: int) -> Callable:
+        """Jit'd: prefill ``n`` prompts of length ``s`` into slot rows."""
+        fn = self._prefill_fns.get((n, s))
+        if fn is not None:
+            return fn
+        cfg, rt = self.cfg, self.rt
+        max_len, dtype = self.max_len, self.cache_dtype
+        chunk = self.prefill_chunk
+
+        def prefill_into_slots(params, tokens, caches, slot_ids,
+                               last_logits):
+            mini = tf.init_cache(cfg, n, max_len, dtype)
+            if chunk is None or s <= chunk:
+                logits, mini = tf.prefill(cfg, params, {"inputs": tokens},
+                                          mini, rt)
+            else:
+                off = 0
+                logits = None
+                while off < s:                       # static unroll
+                    c = min(chunk, s - off)
+                    logits, mini = tf.prefill(
+                        cfg, params, {"inputs": tokens[:, off:off + c]},
+                        mini, rt, kv_offset=off)
+                    off += c
+            caches = tf.scatter_cache_slots(cfg, caches, mini, slot_ids)
+            last_logits = last_logits.at[slot_ids].set(
+                logits.astype(last_logits.dtype))
+            return last_logits, caches
+
+        fn = jax.jit(prefill_into_slots, donate_argnums=self._donate((2, 4)))
+        self._prefill_fns[(n, s)] = fn
+        return fn
+
+    def _get_loop(self, n_steps: int) -> Callable:
+        fn = self._loop_fns.get(n_steps)
+        if fn is not None:
+            return fn
+        loop = make_decode_loop(self.cfg, n_steps, self.rt, self.temperature)
+        fn = jax.jit(loop, donate_argnums=self._donate((1, 2, 3, 4, 5)))
+        self._loop_fns[n_steps] = fn
+        return fn
+
+    # -- request flow -------------------------------------------------------
+
+    def warmup(self, prompt_len: int) -> float:
+        """Deploy-time warmup: trigger (or deserialize from the persistent
+        compilation cache) the prefill and decode executables for this
+        workload shape by serving one throwaway full-slot trace, then reset
+        the serving state.  Returns the seconds spent.
+
+        Standard serving practice — run before accepting traffic so
+        steady-state tok/s and per-request TTFT don't pay first-use costs.
+        One trace per possible admission width (powers of two up to the
+        slot count) covers every prefill jit key this prompt length can
+        produce, plus the decode loops (1 and ``decode_chunk``).
+        """
+        t0 = time.perf_counter()
+        counts = {self.slots} | {1 << i
+                                 for i in range((self.slots - 1).bit_length())}
+        for count in sorted(counts, reverse=True):
+            dummies = [Request(rid=-1 - i,
+                               prompt=np.zeros((prompt_len,), np.int32),
+                               max_new_tokens=self.decode_chunk)
+                       for i in range(count)]
+            for r in dummies:
+                self.submit(r)
+            self.run()
+        # slots auto-freed on completion; dummy cache rows are fully
+        # overwritten by the next admission's scatter.  Reset counters.
+        for k in self.stats:
+            self.stats[k] = 0
+        return time.perf_counter() - t0
 
     def submit(self, req: Request) -> None:
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} needs at least one free "
+                f"cache slot for decode (max_len={self.max_len})")
+        req._t_submit = time.perf_counter()
         self.queue.append(req)
 
     def _admit(self) -> None:
+        """Fill free slots from the queue: one batched prefill dispatch per
+        distinct prompt length (dispatch count independent of the length)."""
+        admitted: list[tuple[int, Request]] = []
         for i in range(self.slots):
             if self.active[i] is None and self.queue:
                 req = self.queue.pop(0)
                 self.active[i] = req
-                # prefill by streaming the prompt through decode steps for
-                # this slot (keeps a single cache layout; a batched prefill
-                # path exists via tf.prefill for offline use)
-                for t, tok in enumerate(req.prompt):
-                    self.kv_len[i] += 1
-                    toks = np.zeros((self.slots, 1), np.int32)
-                    toks[i, 0] = tok
-                    logits, self.caches = self._decode(
-                        self.params, jnp.asarray(toks), self.caches,
-                        jnp.asarray(self.kv_len))
-                req._last_logits = np.asarray(logits[i])
-
-    def step(self) -> None:
-        """One decode step for every active slot."""
-        self._admit()
-        if not any(r is not None for r in self.active):
+                admitted.append((i, req))
+        if not admitted:
             return
-        toks = np.zeros((self.slots, 1), np.int32)
-        for i, req in enumerate(self.active):
-            if req is None:
-                continue
-            logits = getattr(req, "_last_logits")
-            self.key, sub = jax.random.split(self.key)
-            nxt = int(sample_logits(jnp.asarray(logits)[None], sub,
-                                    self.temperature)[0])
-            req.generated.append(nxt)
-            toks[i, 0] = nxt
-            self.kv_len[i] += 1
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(toks), self.caches,
-            jnp.asarray(self.kv_len))
-        logits = np.asarray(logits)
-        for i, req in enumerate(self.active):
-            if req is None:
-                continue
-            req._last_logits = logits[i]
-            if (len(req.generated) >= req.max_new_tokens
-                    or self.kv_len[i] >= self.max_len - 1):
+        by_len: dict[int, list] = {}
+        for slot, req in admitted:
+            by_len.setdefault(len(req.prompt), []).append((slot, req))
+        for s, group in sorted(by_len.items()):
+            # pad the group to the next power of two (duplicate rows
+            # scatter the same data twice — deterministic): bounded jit
+            # keys per prompt length without paying full-slot-width
+            # prefill FLOPs for a single late admission
+            width = next_pow2(len(group))
+            padded = group + [group[-1]] * (width - len(group))
+            slot_ids = np.array([g[0] for g in padded], np.int32)
+            toks = np.stack([g[1].prompt for g in padded]).astype(np.int32)
+            fn = self._get_prefill(len(padded), s)
+            self._last_logits, self.caches = fn(
+                self.params, jnp.asarray(toks), self.caches,
+                jnp.asarray(slot_ids), self._last_logits)
+            self.stats["prefill_dispatches"] += 1
+            for slot, req in group:
+                self.kv_len[slot] = s
+                # ≥1 token always (the seed engine's semantics), bounded by
+                # the request and the cache capacity
+                self.remaining[slot] = min(
+                    req.max_new_tokens, max(1, self.max_len - 1 - s))
+        self._kv_len = jnp.asarray(self.kv_len)
+        self._remaining = jnp.asarray(self.remaining)
+
+    def _decode_chunk(self) -> None:
+        """One fused dispatch: up to ``decode_chunk`` tokens for every
+        active slot, then harvest + retire finished requests."""
+        act = [i for i, r in enumerate(self.active) if r is not None]
+        if not act:
+            return
+        rem_before = self.remaining.copy()
+        if any(not self.active[i].generated for i in act):
+            # freshly admitted slot: run a single step first so its first
+            # token reaches the host immediately — keeps the reported TTFT
+            # a first-token latency, not full-chunk latency
+            n = 1
+        else:
+            # the while_loop exits as soon as every budget is spent, so a
+            # full-chunk n costs nothing when fewer steps are needed; two
+            # jit keys total {1, decode_chunk} — both built by warmup()
+            n = self.decode_chunk
+        fn = self._get_loop(n)
+        toks, self.caches, self._kv_len, self._last_logits, \
+            self._remaining, self.key, steps = fn(
+                self.params, self.caches, self._kv_len, self._last_logits,
+                self._remaining, self.key)
+        self.stats["decode_dispatches"] += 1
+        self.stats["decode_steps"] += int(steps)
+
+        toks = np.asarray(toks)                       # [n, slots]; one sync
+        now = time.perf_counter()
+        self.kv_len = np.array(self._kv_len)          # writable host mirrors
+        self.remaining = np.array(self._remaining)
+        for i in act:
+            req = self.active[i]
+            take = int(min(n, rem_before[i]))
+            if take > 0:
+                if not req.generated and req.ttft is None:
+                    req.ttft = now - getattr(req, "_t_submit", now)
+                req.generated.extend(int(t) for t in toks[:take, i])
+                self.stats["tokens_decoded"] += take
+            if self.remaining[i] <= 0:
                 req.done = True
                 self.active[i] = None
                 self.kv_len[i] = 0
 
+    def step(self) -> None:
+        """Admit waiting requests, then run one fused decode dispatch."""
+        self._admit()
+        self._decode_chunk()
+
     def run(self, max_steps: int = 1000) -> None:
         steps = 0
-        while (self.queue or any(self.active)) and steps < max_steps:
+        while (self.queue or any(r is not None for r in self.active)) \
+                and steps < max_steps:
             self.step()
             steps += 1

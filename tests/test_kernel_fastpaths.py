@@ -1,0 +1,118 @@
+"""Fast-path correctness: exp-as-MACCs error bound, banded sliding-window
+equivalence, and split-K decode edge cases.  (No hypothesis dependency —
+these must run even when the property-test suite is skipped.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import decode_reference, fusemax_attention, \
+    fusemax_decode, mha_reference
+from repro.kernels.fusemax import exp_maccs
+
+
+def mk(seed, b, hq, hkv, p, m, e, f):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (b, hq, p, e), jnp.float32),
+            jax.random.normal(ks[1], (b, hkv, m, e), jnp.float32),
+            jax.random.normal(ks[2], (b, hkv, m, f), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# exp via 6 MACCs (paper [36], §V)
+# ---------------------------------------------------------------------------
+
+def test_exp_maccs_relative_error_bound():
+    # decode/attention only ever evaluate exp on x ≤ 0 (s - running max)
+    x = jnp.linspace(-30.0, 0.0, 20001)
+    got = np.asarray(exp_maccs(x))
+    want = np.exp(np.asarray(x, np.float64))
+    rel = np.abs(got - want) / np.maximum(want, 1e-45)
+    assert rel.max() < 2e-5, f"max rel err {rel.max():.3e}"
+
+
+def test_exp_maccs_underflow_clamps_to_zeroish():
+    x = jnp.asarray([-1e4, -500.0, -88.0])
+    got = np.asarray(exp_maccs(x))
+    assert np.all(np.isfinite(got))
+    assert np.all(got >= 0.0)
+    assert got[0] < 1e-35
+
+
+# ---------------------------------------------------------------------------
+# banded sliding-window evaluation (S·2W score work instead of S²)
+# ---------------------------------------------------------------------------
+
+def test_banded_window_matches_unbanded(monkeypatch):
+    b, hq, hkv, s, e = 1, 4, 2, 256, 32
+    w = 64                                  # s % w == 0, s // w == 4 ≥ 2
+    q, k, v = mk(3, b, hq, hkv, s, s, e, e)
+
+    monkeypatch.delenv("REPRO_NO_BANDING", raising=False)
+    banded = fusemax_attention(q, k, v, causal=True, window=w, impl="jnp")
+    monkeypatch.setenv("REPRO_NO_BANDING", "1")
+    plain = fusemax_attention(q, k, v, causal=True, window=w, impl="jnp")
+    np.testing.assert_allclose(np.asarray(banded), np.asarray(plain),
+                               rtol=2e-5, atol=2e-5)
+    ref = mha_reference(q, k, v, causal=True, window=w)
+    np.testing.assert_allclose(np.asarray(banded), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_banded_window_with_softcap(monkeypatch):
+    b, hq, hkv, s, e = 1, 2, 2, 128, 16
+    w = 32
+    q, k, v = mk(4, b, hq, hkv, s, s, e, e)
+    monkeypatch.delenv("REPRO_NO_BANDING", raising=False)
+    banded = fusemax_attention(q, k, v, causal=True, window=w, softcap=30.0,
+                               impl="jnp")
+    ref = mha_reference(q, k, v, causal=True, window=w, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(banded), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# split-K decode edge cases
+# ---------------------------------------------------------------------------
+
+def test_decode_kv_len_one():
+    # a single valid cache entry: the query attends only itself
+    q, k, v = mk(5, 2, 4, 2, 1, 64, 16, 16)
+    kv_len = jnp.asarray([1, 1], jnp.int32)
+    for impl in ("jnp", "pallas"):
+        out = fusemax_decode(q, k, v, kv_len, impl=impl)
+        ref = decode_reference(q, k, v, kv_len)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5,
+                                   err_msg=f"impl={impl}")
+
+
+def test_decode_m_not_divisible_by_splits():
+    # M = 100: requested splits=8 must shrink to a divisor of M
+    q, k, v = mk(6, 1, 4, 4, 1, 100, 16, 16)
+    kv_len = jnp.asarray([77], jnp.int32)
+    out = fusemax_decode(q, k, v, kv_len, impl="jnp", splits=8)
+    ref = decode_reference(q, k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_autotuned_splits_match_reference():
+    # splits=None → autotuner choice; ragged kv lengths across the batch
+    q, k, v = mk(7, 3, 8, 2, 1, 256, 32, 32)
+    kv_len = jnp.asarray([1, 100, 256], jnp.int32)
+    for impl in ("jnp", "pallas"):
+        out = fusemax_decode(q, k, v, kv_len, impl=impl)
+        ref = decode_reference(q, k, v, kv_len)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5,
+                                   err_msg=f"impl={impl}")
+
+
+def test_decode_splits_exceed_kv_len():
+    # more splits than valid tokens: tail splits fully masked
+    q, k, v = mk(8, 1, 4, 1, 1, 64, 16, 16)
+    kv_len = jnp.asarray([3], jnp.int32)
+    out = fusemax_decode(q, k, v, kv_len, impl="jnp", splits=16, block_k=4)
+    ref = decode_reference(q, k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)

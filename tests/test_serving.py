@@ -55,3 +55,81 @@ def test_engine_handles_more_requests_than_slots():
     engine.run()
     assert all(r.done for r in reqs)
     assert all(len(r.generated) == 3 for r in reqs)
+
+
+def test_dispatch_counts_are_batched_not_per_token():
+    """The fast path's contract: prefill dispatches independent of prompt
+    length; decode dispatches ≪ decoded tokens (fused multi-step loop)."""
+    cfg = get_config("stablelm-1.6b-smoke")
+    params, _ = tf.init(cfg, jax.random.PRNGKey(0), RT)
+    rng = np.random.default_rng(0)
+
+    counts = {}
+    for plen in (4, 24):
+        engine = ServeEngine(cfg, params, slots=2, max_len=64, rt=RT)
+        for i in range(2):
+            engine.submit(Request(
+                rid=i, prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+                max_new_tokens=8))
+        engine.run()
+        counts[plen] = dict(engine.stats)
+
+    for plen, st in counts.items():
+        assert st["tokens_decoded"] == 16
+        assert st["decode_dispatches"] < st["tokens_decoded"], \
+            f"per-token decode dispatches at prompt_len={plen}: {st}"
+    assert counts[4]["prefill_dispatches"] == counts[24]["prefill_dispatches"]
+
+
+def test_engine_mixed_prompt_lengths_and_budgets():
+    cfg = get_config("stablelm-1.6b-smoke")
+    params, _ = tf.init(cfg, jax.random.PRNGKey(0), RT)
+    engine = ServeEngine(cfg, params, slots=3, max_len=64, rt=RT,
+                         decode_chunk=4)
+    rng = np.random.default_rng(1)
+    lens = [3, 9, 5, 7]
+    buds = [2, 7, 4, 1]
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, l).astype(np.int32),
+                    max_new_tokens=b) for i, (l, b) in enumerate(zip(lens, buds))]
+    for r in reqs:
+        engine.submit(r)
+    engine.run()
+    assert all(r.done for r in reqs)
+    assert [len(r.generated) for r in reqs] == buds
+    assert all(r.ttft is not None and r.ttft >= 0 for r in reqs)
+
+
+def test_engine_temperature_sampling_runs():
+    cfg = get_config("stablelm-1.6b-smoke")
+    params, _ = tf.init(cfg, jax.random.PRNGKey(0), RT)
+    engine = ServeEngine(cfg, params, slots=2, max_len=32, rt=RT,
+                         temperature=0.8)
+    rng = np.random.default_rng(2)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                    max_new_tokens=5) for i in range(2)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run()
+    assert all(r.done and len(r.generated) == 5 for r in reqs)
+    assert all(0 <= t < cfg.vocab for r in reqs for t in r.generated)
+
+
+def test_chunked_prefill_matches_whole_prompt():
+    """kv_offset continuation (full + ring/window caches): an engine that
+    prefills in chunks emits the same greedy tokens as whole-prompt."""
+    for arch in ("stablelm-1.6b-smoke", "gemma2-9b-smoke"):
+        cfg = get_config(arch)
+        params, _ = tf.init(cfg, jax.random.PRNGKey(0), RT)
+        prompt = np.asarray(
+            np.random.default_rng(3).integers(0, cfg.vocab, 20), np.int32)
+
+        outs = []
+        for chunk in (None, 8):
+            engine = ServeEngine(cfg, params, slots=1, max_len=128, rt=RT,
+                                 prefill_chunk=chunk)
+            req = Request(rid=0, prompt=prompt, max_new_tokens=6)
+            engine.submit(req)
+            engine.run()
+            assert req.done
+            outs.append(req.generated)
+        assert outs[0] == outs[1], f"arch={arch}: {outs}"
