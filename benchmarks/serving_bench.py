@@ -1,10 +1,16 @@
 """Serving benchmark: end-to-end engine throughput → BENCH_serving.json.
 
 Thin wrapper over ``repro.launch.serve`` (the launcher IS the benchmark:
-it reports tok/s, TTFT, steps/s and dispatch counts, and writes
-``BENCH_serving.json``).  Use this module for a programmatic run:
+it reports tok/s, TTFT, steps/s, dispatch counts, and cache-memory
+residency per layout, and writes ``BENCH_serving.json``).  Use this module
+for a programmatic run:
 
   PYTHONPATH=src python benchmarks/serving_bench.py [--smoke]
+
+``--smoke`` serves a mixed-length trace (prompts 8–64 tokens) through
+BOTH cache layouts (dense and paged), cross-checking greedy-output
+equality and recording resident cache bytes / bytes per live token /
+peak pages in use for each.
 """
 from __future__ import annotations
 
@@ -17,8 +23,10 @@ def main() -> None:
     argv = sys.argv[1:]
     if "--smoke" in argv:
         argv.remove("--smoke")
-        argv = ["--requests", "4", "--slots", "2", "--max-len", "128",
-                "--prompt-len", "8", "--new-tokens", "4",
+        argv = ["--requests", "6", "--slots", "2", "--max-len", "128",
+                "--prompt-len", "8", "--prompt-len-max", "64",
+                "--new-tokens", "4", "--cache-layout", "both",
+                "--page-size", "16", "--repeats", "5",
                 "--arch", "stablelm-1.6b-smoke"] + argv
     serve_mod.main(argv)
 

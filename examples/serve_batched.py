@@ -1,6 +1,11 @@
 """Batched serving example: continuous batching over the FuseMax decode path.
 
   PYTHONPATH=src python examples/serve_batched.py
+
+Serves a mixed-length trace through both cache layouts (dense and paged)
+and prints the throughput + memory A/B.  ``--json ''`` keeps the example
+from clobbering the tracked ``BENCH_serving.json`` trajectory artifact
+(pass ``--json <path>`` after the script name to write one).
 """
 import sys
 
@@ -9,5 +14,6 @@ from repro.launch import serve as serve_mod
 if __name__ == "__main__":
     sys.argv = ["serve", "--arch", "gemma2-9b-smoke", "--requests", "6",
                 "--slots", "4", "--max-len", "128", "--prompt-len", "12",
-                "--new-tokens", "8"] + sys.argv[1:]
+                "--prompt-len-max", "48", "--new-tokens", "8",
+                "--cache-layout", "both", "--json", ""] + sys.argv[1:]
     serve_mod.main()

@@ -10,11 +10,15 @@
 from repro.kernels import autotune
 from repro.kernels.autotune import (
     AttentionParams, DecodeParams, attention_params, decode_params,
-    measure_best,
+    measure_best, paged_decode_params,
 )
 from repro.kernels.fusemax import exp_maccs, fusemax_attention_pallas
-from repro.kernels.decode import fusemax_decode_pallas
-from repro.kernels.ops import fusemax_attention, fusemax_decode
+from repro.kernels.decode import (
+    fusemax_decode_paged_pallas, fusemax_decode_pallas,
+)
+from repro.kernels.ops import (
+    fusemax_attention, fusemax_decode, fusemax_decode_paged, gather_pages,
+)
 from repro.kernels.ref import decode_reference, mha_reference
 
 __all__ = [
@@ -25,10 +29,14 @@ __all__ = [
     "decode_params",
     "decode_reference",
     "exp_maccs",
+    "gather_pages",
     "measure_best",
+    "paged_decode_params",
     "fusemax_attention",
     "fusemax_attention_pallas",
     "fusemax_decode",
+    "fusemax_decode_paged",
+    "fusemax_decode_paged_pallas",
     "fusemax_decode_pallas",
     "mha_reference",
 ]

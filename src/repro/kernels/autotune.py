@@ -193,6 +193,47 @@ def attention_params(p: int, m: int, e: int, f: int, *,
     return best
 
 
+def _paged_decode_candidates(n_pages: int, page_size: int) -> list[DecodeParams]:
+    """Candidates for the paged split-K decode: ``splits`` must divide the
+    page count (split boundaries stay page-aligned so the block-table
+    lookup never straddles two pages) and ``block_k`` must divide
+    ``page_size`` (one K/V tile is always a slice of a single page)."""
+    base = _ARCH.pe2d_cols
+    out = []
+    for splits in (1, 2, 4, 8, 16):
+        if splits > n_pages or n_pages % splits:
+            continue
+        split_tokens = (n_pages // splits) * page_size
+        if split_tokens < base and splits > 1:
+            continue
+        for bk in (base, 2 * base, 4 * base):
+            bk = min(bk, page_size)
+            if page_size % bk:
+                bk = page_size
+            out.append(DecodeParams(splits, bk))
+    return list(dict.fromkeys(out)) or [DecodeParams(1, page_size)]
+
+
+def paged_decode_params(n_pages: int, page_size: int, g: int, e: int, f: int,
+                        *, backend: str = "cpu",
+                        impl: str = "jnp") -> DecodeParams:
+    """Pick (splits, block_k) for a paged split-K decode over ``n_pages``
+    pages of ``page_size`` tokens each.  Same cost model as
+    :func:`decode_params` (total M = n_pages·page_size) restricted to
+    page-aligned candidates."""
+    _load_disk_cache()
+    key = ("pdecode", backend, impl, str(n_pages), str(page_size),
+           str(_bucket(g)), str(e), str(f))
+    hit = _TABLE.get(key)
+    if hit is not None:
+        return DecodeParams(int(hit[0]), int(hit[1]))
+    m = n_pages * page_size
+    cands = _paged_decode_candidates(n_pages, page_size)
+    best = min(cands, key=lambda c: _decode_cost(c, m, g, e, f))
+    _TABLE[key] = (best.splits, best.block_k)
+    return best
+
+
 def decode_params(m: int, g: int, e: int, f: int, *,
                   backend: str = "cpu",
                   impl: str = "jnp") -> DecodeParams:

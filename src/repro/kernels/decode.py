@@ -11,6 +11,16 @@ Decode offers no query-row parallelism (P = 1 token per sequence), so the
 
 Ragged KV lengths (each sequence in the batch has its own valid prefix of
 the cache) arrive via scalar prefetch (SMEM) and mask the tail chunks.
+
+The *paged* variant (``fusemax_decode_paged_pallas``) reads K/V from a
+page pool ``[num_pages, page_size, Hkv, E]`` through a per-sequence block
+table instead of a dense cache: the block table rides in as a second
+scalar-prefetch operand and the K/V ``index_map``s resolve each tile's
+page id from it, so the sweep touches only the pages the sequence owns.
+Split boundaries stay page-aligned (``splits`` divides the table width,
+``block_k`` divides ``page_size``) and the partials combine with the same
+associative running-max algebra — the cascade is indifferent to where the
+keys physically live.
 """
 from __future__ import annotations
 
@@ -177,7 +187,12 @@ def fusemax_decode_pallas(
         interpret=interpret,
     )(kv_len.astype(jnp.int32), q, k4, v4)
 
-    # -- combine partials (associative running-max algebra, Eqs. 48-52) ---
+    return _combine_partials(pm, pl_, pnv, q.dtype)
+
+
+def _combine_partials(pm, pl_, pnv, dtype):
+    """Combine split-K partials (associative running-max algebra,
+    Eqs. 48-52) — shared by the dense and paged kernels."""
     pm = pm[..., 0]                          # [BHkv, S, G]
     pl_ = pl_[..., 0]
     gm = jnp.max(pm, axis=1, keepdims=True)
@@ -185,4 +200,173 @@ def fusemax_decode_pallas(
     rd = jnp.sum(pl_ * cf, axis=1)           # [BHkv, G]
     rnv = jnp.sum(pnv * cf[..., None], axis=1)
     rd = jnp.where(rd == 0.0, 1.0, rd)
-    return (rnv / rd[..., None]).astype(q.dtype)
+    return (rnv / rd[..., None]).astype(dtype)
+
+
+def _paged_decode_partials_kernel(
+    kv_len_ref,                     # SMEM scalar-prefetch: [B] int32
+    bt_ref,                         # SMEM scalar-prefetch: [B, W] int32
+    q_ref, k_ref, v_ref,
+    pm_ref, pl_ref, pnv_ref,        # partial outputs per (bh, s)
+    m_scratch, l_scratch, acc_scratch,
+    *,
+    scale: float,
+    softcap: Optional[float],
+    hkv: int,
+    block_k: int,
+    m2_total: int,
+    split_len: int,
+    exp_impl: str,
+):
+    """Same running-state sweep as :func:`_decode_partials_kernel`, but the
+    K/V tiles were block-selected through the block table (see the
+    ``index_map``s in :func:`fusemax_decode_paged_pallas`); the kernel body
+    itself only needs the *logical* token index for ragged masking."""
+    bh = pl.program_id(0)
+    s = pl.program_id(1)
+    m2 = pl.program_id(2)
+
+    kv_len = kv_len_ref[bh // hkv]           # valid logical prefix
+
+    @pl.when(m2 == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    k_lo = s * split_len + m2 * block_k      # logical token index
+    run = k_lo < kv_len
+
+    @pl.when(run)
+    def _body():
+        q_tile = q_ref[0].astype(jnp.float32)            # [G, E]
+        k_tile = k_ref[0, :, 0].astype(jnp.float32)      # [block_k, E]
+        v_tile = v_ref[0, :, 0].astype(jnp.float32)      # [block_k, F]
+
+        sc = jax.lax.dot_general(
+            q_tile, k_tile, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                        # [G, block_k]
+        if softcap is not None:
+            sc = softcap * jnp.tanh(sc / softcap)
+
+        cols = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+        ok = (k_lo + cols) < kv_len                      # ragged mask
+        sc = jnp.where(ok, sc, NEG_INF)
+
+        m_prev = m_scratch[:, :1]
+        lm = jnp.max(sc, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, lm)
+        p = _exp(sc - m_new, exp_impl)
+        sld = jnp.sum(p, axis=1, keepdims=True)
+        prm = _exp(m_prev - m_new, exp_impl)
+        l_scratch[...] = jnp.broadcast_to(
+            l_scratch[:, :1] * prm + sld, l_scratch.shape)
+        acc_scratch[...] = acc_scratch[...] * prm + jax.lax.dot_general(
+            p, v_tile, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scratch[...] = jnp.broadcast_to(m_new, m_scratch.shape)
+
+    @pl.when(m2 == m2_total - 1)
+    def _finish():
+        pm_ref[0, 0] = m_scratch[...].astype(pm_ref.dtype)
+        pl_ref[0, 0] = l_scratch[...].astype(pl_ref.dtype)
+        pnv_ref[0, 0] = acc_scratch[...].astype(pnv_ref.dtype)
+
+
+def fusemax_decode_paged_pallas(
+    q: jnp.ndarray,            # [BHkv, G, E]  (G padded ≥ 8)
+    k_pages: jnp.ndarray,      # [P, page_size, Hkv, E]
+    v_pages: jnp.ndarray,      # [P, page_size, Hkv, F]
+    block_table: jnp.ndarray,  # [B, W] int32 page ids
+    kv_len: jnp.ndarray,       # [B] int32 valid logical lengths
+    *,
+    scale: float,
+    softcap: Optional[float] = None,
+    hkv: int,
+    splits: int = 1,
+    block_k: int = 128,
+    exp_impl: str = "native",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Paged split-K FuseMax decode. Returns [BHkv, G, F] (q.dtype).
+
+    The grid sweeps logical token chunks; each K/V tile's physical page is
+    looked up in the block table inside the ``index_map`` (standard paged
+    attention: the gather happens in the pipeline's block fetch, never as
+    a materialized [B, T, E] copy).
+    """
+    bh, g, e = q.shape
+    n_pages, page_size, hkv_p, f = v_pages.shape
+    b, w = block_table.shape
+    if hkv_p != hkv:
+        raise ValueError(f"pages carry Hkv={hkv_p}, caller says {hkv}")
+    if bh != b * hkv:
+        raise ValueError(f"q batch {bh} != B·Hkv = {b}·{hkv}")
+    if w % splits:
+        raise ValueError(f"table width {w} not divisible by splits={splits}")
+    block_k = min(block_k, page_size)
+    if page_size % block_k:
+        raise ValueError(f"page_size={page_size} % block_k={block_k}")
+    split_pages = w // splits
+    split_len = split_pages * page_size
+    blocks_per_page = page_size // block_k
+    m2 = split_pages * blocks_per_page
+    grid = (bh, splits, m2)
+
+    kernel = functools.partial(
+        _paged_decode_partials_kernel,
+        scale=scale,
+        softcap=softcap,
+        hkv=hkv,
+        block_k=block_k,
+        m2_total=m2,
+        split_len=split_len,
+        exp_impl=exp_impl,
+    )
+
+    def _kv_index(bh_i, s, m2_i, kv_len_ref, bt_ref):
+        page_slot = s * split_pages + m2_i // blocks_per_page
+        return (bt_ref[bh_i // hkv, page_slot], m2_i % blocks_per_page,
+                bh_i % hkv, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, e), lambda b_i, s, m2_i, *_: (b_i, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, e), _kv_index),
+            pl.BlockSpec((1, block_k, 1, f), _kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, LANES),
+                         lambda b_i, s, m2_i, *_: (b_i, s, 0, 0)),
+            pl.BlockSpec((1, 1, g, LANES),
+                         lambda b_i, s, m2_i, *_: (b_i, s, 0, 0)),
+            pl.BlockSpec((1, 1, g, f),
+                         lambda b_i, s, m2_i, *_: (b_i, s, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, LANES), jnp.float32),
+            pltpu.VMEM((g, LANES), jnp.float32),
+            pltpu.VMEM((g, f), jnp.float32),
+        ],
+    )
+
+    pm, pl_, pnv = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, splits, g, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((bh, splits, g, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((bh, splits, g, f), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), block_table.astype(jnp.int32),
+      q, k_pages, v_pages)
+
+    return _combine_partials(pm, pl_, pnv, q.dtype)

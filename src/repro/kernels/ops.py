@@ -26,7 +26,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import autotune, ref as _ref
-from repro.kernels.decode import fusemax_decode_pallas
+from repro.kernels.decode import (
+    fusemax_decode_paged_pallas, fusemax_decode_pallas,
+)
 from repro.kernels.fusemax import NEG_INF, fusemax_attention_pallas
 
 
@@ -367,6 +369,114 @@ def _decode_splitk_jnp(
     return out.reshape(b, hq, 1, f).astype(q.dtype)
 
 
+def _fold_decode_q(q: jnp.ndarray, b: int, hkv: int, group: int,
+                   e: int) -> jnp.ndarray:
+    """Fold GQA groups into kernel query rows ([B, Hq, 1, E] →
+    [B·Hkv, G_pad, E], G padded to the 8-sublane floor) — shared by the
+    dense and paged decode dispatch paths."""
+    g_pad = max(8, _round_up(group, 8))
+    q_f = q.reshape(b, hkv, group, e).reshape(b * hkv, group, e)
+    if g_pad != group:
+        q_f = jnp.pad(q_f, ((0, 0), (0, g_pad - group), (0, 0)))
+    return q_f
+
+
+def _unfold_decode_out(out: jnp.ndarray, b: int, hkv: int, group: int,
+                       f: int) -> jnp.ndarray:
+    """Inverse of :func:`_fold_decode_q` for kernel outputs
+    ([B·Hkv, G_pad, F] → [B, Hq, 1, F])."""
+    out = out[:, :group]
+    return out.reshape(b, hkv, group, f).reshape(b, hkv * group, 1, f)
+
+
+def gather_pages(pages: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
+    """Materialize a block-table view of a page pool.
+
+    pages: [P, page_size, *tail]; block_table: [B, W] int32 →
+    [B, W·page_size, *tail].  Unallocated table entries (sentinel 0) gather
+    page 0's content — callers mask by the logical length, so the garbage
+    never contributes.  This is the jnp/ref read path; the Pallas kernel
+    resolves pages inside its ``index_map`` instead and never materializes
+    this view.
+    """
+    b = block_table.shape[0]
+    g = pages[block_table]                      # [B, W, page_size, *tail]
+    return g.reshape(b, -1, *pages.shape[2:])
+
+
+def fusemax_decode_paged(
+    q: jnp.ndarray,            # [B, Hq, 1, E]
+    k_pages: jnp.ndarray,      # [P, page_size, Hkv, E]
+    v_pages: jnp.ndarray,      # [P, page_size, Hkv, F]
+    block_table: jnp.ndarray,  # [B, W] int32 page ids
+    kv_len: jnp.ndarray,       # [B] valid logical lengths
+    *,
+    capacity: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    impl: str = "auto",
+    splits: Optional[int] = None,
+    block_k: Optional[int] = None,
+    exp_impl: str = "native",
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Single-token decode against a *paged* KV cache.
+
+    ``capacity`` truncates the logical view to that many tokens (ring
+    caches: capacity = window, which may not fill the last page) — with it,
+    the jnp path sees exactly the dense cache's [B, Hkv, capacity, *] view,
+    so outputs are bit-identical to :func:`fusemax_decode` over the dense
+    layout.  The Pallas path runs the true paged kernel (block-table lookup
+    in the index_map, page-aligned splits from the autotuner).
+    """
+    b, hq, p, e = q.shape
+    n_pages, page_size, hkv, f = v_pages.shape
+    w = block_table.shape[1]
+    if p != 1:
+        raise ValueError("decode expects exactly one query token")
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (e ** 0.5)
+
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+
+    if impl in ("jnp", "ref"):
+        # gather through the table, then delegate: same shapes, same
+        # autotuned splits, same arithmetic as the dense layout
+        cap = w * page_size if capacity is None else capacity
+        k = jnp.moveaxis(gather_pages(k_pages, block_table), 2, 1)
+        v = jnp.moveaxis(gather_pages(v_pages, block_table), 2, 1)
+        return fusemax_decode(
+            q, k[:, :, :cap], v[:, :, :cap], kv_len,
+            softcap=softcap, scale=scale, impl=impl, splits=splits,
+            block_k=block_k, exp_impl=exp_impl, interpret=interpret)
+
+    if impl != "pallas":
+        raise ValueError(f"unknown impl: {impl}")
+
+    if splits is None or block_k is None:
+        tuned = autotune.paged_decode_params(
+            w, page_size, max(group, 8), e, f,
+            backend=jax.default_backend(), impl=impl)
+        splits = tuned.splits if splits is None else splits
+        block_k = tuned.block_k if block_k is None else block_k
+    splits = max(1, min(splits, w))
+    while w % splits:
+        splits -= 1
+    block_k = min(block_k, page_size)
+    while page_size % block_k:
+        block_k -= 1
+
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    out = fusemax_decode_paged_pallas(
+        _fold_decode_q(q, b, hkv, group, e), k_pages, v_pages,
+        block_table, kv_len,
+        scale=scale, softcap=softcap, hkv=hkv, splits=splits,
+        block_k=block_k, exp_impl=exp_impl, interpret=interpret,
+    )
+    return _unfold_decode_out(out, b, hkv, group, f)
+
+
 def fusemax_decode(
     q: jnp.ndarray,         # [B, Hq, 1, E]
     k: jnp.ndarray,         # [B, Hkv, M, E]  (cache, padded to M slots)
@@ -417,12 +527,8 @@ def fusemax_decode(
         raise ValueError(f"unknown impl: {impl}")
 
     interpret = (not _on_tpu()) if interpret is None else interpret
-    g_pad = max(8, _round_up(group, 8))
-    q_f = q.reshape(b, hkv, group, e).reshape(b * hkv, group, e)
-    if g_pad != group:
-        q_f = jnp.pad(q_f, ((0, 0), (0, g_pad - group), (0, 0)))
     out = fusemax_decode_pallas(
-        q_f,
+        _fold_decode_q(q, b, hkv, group, e),
         k.reshape(b * hkv, m, e),
         v.reshape(b * hkv, m, f),
         kv_len,
@@ -430,5 +536,4 @@ def fusemax_decode(
         splits=splits, block_k=block_k, exp_impl=exp_impl,
         interpret=interpret,
     )
-    out = out[:, :group]                                  # [B·Hkv, G, F]
-    return out.reshape(b, hkv, group, f).reshape(b, hq, 1, f)
+    return _unfold_decode_out(out, b, hkv, group, f)

@@ -5,6 +5,8 @@ Every attention layer runs on the FuseMax execution engine
 ``impl`` (pallas / jnp / ref) via :class:`repro.model.layers.Runtime`.
 
 Cache protocol (serving):
+
+Dense layout (one row per batch slot, ``max_len`` reserved up front):
   GQA full cache  {"k","v": [B, Hkv, Mmax, dh]}            — global layers
   GQA ring cache  {"k","v": [B, Hkv, window, dh]}          — local layers,
       slot = position % window; RoPE is applied at *write* time with the
@@ -12,6 +14,24 @@ Cache protocol (serving):
       is implied by the ring (valid = min(t+1, window) slots).
   MLA latent cache {"ckv": [B, Mmax, r], "krope": [B, Mmax, rd]} — decode
       uses the absorbed form (scores in latent space; Hkv=1, group=H).
+
+Paged layout (page pool + per-slot block table indirection — resident
+memory tracks live tokens, see :mod:`repro.serving.kv_cache`):
+  GQA  {"k_pages","v_pages": [P, page_size, Hkv, dh]}
+  MLA  {"ckv_pages": [P, page_size, r], "krope_pages": [P, page_size, rd]}
+  Token at logical index l = position % capacity lives at
+  (block_table[slot, l // page_size], l % page_size); ``capacity`` is
+  ``window`` for local layers (the ring *is* the eviction policy: a
+  windowed layer cycles through a fixed ceil(window/page_size)-page
+  working set no matter how long the sequence runs) and ``max_len`` for
+  global/MLA layers.  Logical index == gathered index, so paged reads are
+  bit-identical to the dense layout's.
+
+Length-bucketed prefill: the ``true_len`` argument on the prefill entry
+points marks each row's real prompt length inside a padded (power-of-two
+bucketed) batch.  Writes beyond a row's true length are masked (dropped
+for paged caches, OOB-slot-dropped for dense rings); full dense caches
+tolerate the garbage (masked at read, overwritten by decode).
 """
 from __future__ import annotations
 
@@ -22,10 +42,66 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import LayerSpec, ModelConfig
-from repro.kernels.ops import fusemax_attention, fusemax_decode
+from repro.kernels.ops import (
+    fusemax_attention, fusemax_decode, fusemax_decode_paged, gather_pages,
+)
 from repro.model.layers import (
     Runtime, _init, apply_norm, norm_init, rope,
 )
+
+
+def paged_cache_key(spec: LayerSpec) -> str:
+    """Block-table key for a layer: windowed layers share a table per
+    window size; global (and MLA) layers share the "full" table."""
+    return "full" if spec.window is None else f"w{spec.window}"
+
+
+def write_pages(pages: jnp.ndarray, bt_rows: jnp.ndarray,
+                positions: jnp.ndarray, values: jnp.ndarray,
+                capacity: int, valid: Optional[jnp.ndarray] = None
+                ) -> jnp.ndarray:
+    """Scatter per-token values into a page pool through block-table rows.
+
+    pages: [P, page_size, *tail]; bt_rows: [N, W]; positions: [N, S]
+    absolute token positions; values: [N, S, *tail].  The logical index
+    wraps at ``capacity`` (ring eviction for windowed layers).  Rows of
+    ``valid`` (same shape as positions) that are False are dropped — their
+    page index is pushed out of bounds and jax's scatter ``mode="drop"``
+    discards them, so padded bucket tails and unallocated sentinel entries
+    never corrupt live pages.
+    """
+    page_size = pages.shape[1]
+    l = positions % capacity
+    page = jnp.take_along_axis(bt_rows, l // page_size, axis=1)
+    if valid is not None:
+        page = jnp.where(valid, page, pages.shape[0])    # OOB → dropped
+    return pages.at[page, l % page_size].set(
+        values.astype(pages.dtype), mode="drop")
+
+
+def ring_write_masked(kc: jnp.ndarray, vc: jnp.ndarray,
+                      k_new: jnp.ndarray, v_new: jnp.ndarray,
+                      off: int, true_len: jnp.ndarray
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Write a prompt chunk's K/V ([B, Hkv, S, dh], absolute positions
+    [off, off+S)) into a dense ring cache under length-bucket padding:
+    per row, keep only positions that are (a) real (< true_len) and
+    (b) not already evicted by this chunk's own tail — at most ``window``
+    survivors, so ring slots stay collision-free; masked writes drop via
+    an out-of-bounds slot index.  Shared by whole-prompt and chunked
+    prefill (the single source of the valid-band invariant)."""
+    b, _, s_len, _ = k_new.shape
+    slots = kc.shape[2]
+    tl = true_len[:, None]
+    pos = (off + jnp.arange(s_len))[None]                # [1, S] absolute
+    valid = (pos < tl) & (pos >= jnp.minimum(tl, off + s_len) - slots)
+    slot_idx = jnp.where(valid, pos % slots, slots)      # OOB → dropped
+    bidx = jnp.arange(b)[:, None]
+    kc = kc.at[bidx, :, slot_idx].set(
+        jnp.moveaxis(k_new, 1, 2), mode="drop")
+    vc = vc.at[bidx, :, slot_idx].set(
+        jnp.moveaxis(v_new, 1, 2), mode="drop")
+    return kc, vc
 
 
 # ---------------------------------------------------------------------------
@@ -100,16 +176,39 @@ def gqa_init_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
 def gqa_prefill_chunk(
     p, x: jnp.ndarray, cache: dict, off: int,
     cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
+    true_len: Optional[jnp.ndarray] = None,
 ) -> tuple[jnp.ndarray, dict]:
     """Chunked-prefill continuation: queries [off, off+S) attend the cached
     history plus the chunk itself, and the chunk's K/V are written into the
     cache.  ``off`` is a static chunk offset (positions [0, off) must
-    already be cached).  x: [B, S, d]."""
+    already be cached).  x: [B, S, d].  ``true_len`` (length-bucketed
+    batches) masks ring writes past each row's real prompt length."""
     b, s_len, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(off, off + s_len), (b, s_len))
     q, k_new, v_new = _proj_qkv(p, x, cfg, positions, rt)
     kc, vc = cache["k"], cache["v"]
     slots = kc.shape[2]
+
+    if spec.window is not None and true_len is not None:
+        # ring + bucket padding: attend the gathered history band as the
+        # unmasked path does; writes go through the shared masked ring
+        # scatter
+        w = spec.window
+        klo = max(0, off - w + 1)
+        hist = jnp.arange(klo, off)
+        k_band = jnp.concatenate([kc[:, :, hist % slots], k_new], axis=2)
+        v_band = jnp.concatenate([vc[:, :, hist % slots], v_new], axis=2)
+        out = fusemax_attention(
+            q, k_band, v_band,
+            causal=cfg.causal, window=w, softcap=cfg.attn_softcap,
+            q_offset=off - klo,
+            impl=rt.attn_impl, block_q=rt.block_q, block_k=rt.block_k,
+            exp_impl=rt.exp_impl, interpret=rt.interpret,
+            unroll_scan=rt.unroll_runs,
+        )
+        kc, vc = ring_write_masked(kc, vc, k_new, v_new, off, true_len)
+        y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
+        return y, {"k": kc, "v": vc}
 
     if spec.window is None:
         kc = kc.at[:, :, off:off + s_len].set(k_new)
@@ -174,13 +273,140 @@ def gqa_decode(
         q, k_cache, v_cache, eff_len,
         softcap=cfg.attn_softcap,
         window=win,
-        impl=rt.attn_impl if rt.attn_impl != "jnp" else "jnp",
+        impl=rt.attn_impl,
         splits=rt.decode_splits,
         exp_impl=rt.exp_impl,
         interpret=rt.interpret,
     )                                                    # [B, H, 1, dh]
     y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
     return y, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# GQA — paged cache variants
+# ---------------------------------------------------------------------------
+
+def gqa_init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                         dtype) -> dict:
+    shape = (num_pages, page_size, cfg.n_kv_heads, cfg.dh)
+    return {"k_pages": jnp.zeros(shape, dtype),
+            "v_pages": jnp.zeros(shape, dtype)}
+
+
+def _gqa_capacity(cache: dict, bt_rows: jnp.ndarray,
+                  spec: LayerSpec) -> int:
+    """Logical token capacity of a paged GQA cache: the window for local
+    layers (ring eviction), the full table span for global layers."""
+    page_size = cache["k_pages"].shape[1]
+    return spec.window if spec.window is not None \
+        else bt_rows.shape[1] * page_size
+
+
+def gqa_prefill_paged(
+    p, x: jnp.ndarray, cache: dict, bt_rows: jnp.ndarray, off: int,
+    cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
+    true_len: jnp.ndarray,
+) -> tuple[jnp.ndarray, dict]:
+    """Prefill a prompt chunk straight into the page pool (no dense
+    mini-cache): queries [off, off+S) attend history gathered through the
+    block-table rows plus the chunk itself; the chunk's K/V scatter into
+    pages, masked by ``true_len``.  Outputs are bit-identical to the dense
+    prefill path — the attention inputs are the same arrays, only the
+    K/V residency differs."""
+    b, s_len, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(off, off + s_len), (b, s_len))
+    cap = _gqa_capacity(cache, bt_rows, spec)
+    tl = true_len[:, None]
+    pos = positions[:1]                                  # [1, S]
+    valid = (pos < tl) & (pos >= jnp.minimum(tl, off + s_len) - cap)
+
+    if off == 0:
+        y = gqa_forward(p, x, cfg, spec, rt)
+        _, k_new, v_new = _proj_qkv(p, x, cfg, positions, rt)
+    elif spec.window is None:
+        q, k_new, v_new = _proj_qkv(p, x, cfg, positions, rt)
+        # gather only the pages the prefix occupies (off is static)
+        hp = -(-off // cache["k_pages"].shape[1])
+        k_hist = jnp.moveaxis(
+            gather_pages(cache["k_pages"], bt_rows[:, :hp]), 2, 1)[:, :, :off]
+        v_hist = jnp.moveaxis(
+            gather_pages(cache["v_pages"], bt_rows[:, :hp]), 2, 1)[:, :, :off]
+        # chunk K/V rounded to the cache dtype first — the dense path reads
+        # them back out of the cache it just wrote
+        out = fusemax_attention(
+            q, jnp.concatenate([k_hist, k_new.astype(k_hist.dtype)], axis=2),
+            jnp.concatenate([v_hist, v_new.astype(v_hist.dtype)], axis=2),
+            causal=cfg.causal, softcap=cfg.attn_softcap, q_offset=off,
+            impl=rt.attn_impl, block_q=rt.block_q, block_k=rt.block_k,
+            exp_impl=rt.exp_impl, interpret=rt.interpret,
+            unroll_scan=rt.unroll_runs,
+        )
+        y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
+    else:
+        # ring continuation: gather the still-needed history band from the
+        # ring pages before this chunk's writes land
+        w = spec.window
+        q, k_new, v_new = _proj_qkv(p, x, cfg, positions, rt)
+        klo = max(0, off - w + 1)
+        l = jnp.arange(klo, off) % cap
+        page_size = cache["k_pages"].shape[1]
+        pg = bt_rows[:, l // page_size]                  # [B, band]
+        k_hist = jnp.moveaxis(
+            cache["k_pages"][pg, l % page_size], 1, 2)
+        v_hist = jnp.moveaxis(
+            cache["v_pages"][pg, l % page_size], 1, 2)
+        out = fusemax_attention(
+            q, jnp.concatenate([k_hist, k_new], axis=2),
+            jnp.concatenate([v_hist, v_new], axis=2),
+            causal=cfg.causal, window=w, softcap=cfg.attn_softcap,
+            q_offset=off - klo,
+            impl=rt.attn_impl, block_q=rt.block_q, block_k=rt.block_k,
+            exp_impl=rt.exp_impl, interpret=rt.interpret,
+            unroll_scan=rt.unroll_runs,
+        )
+        y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
+
+    k_pages = write_pages(cache["k_pages"], bt_rows, positions,
+                          jnp.moveaxis(k_new, 1, 2), cap, valid)
+    v_pages = write_pages(cache["v_pages"], bt_rows, positions,
+                          jnp.moveaxis(v_new, 1, 2), cap, valid)
+    return y, {"k_pages": k_pages, "v_pages": v_pages}
+
+
+def gqa_decode_paged(
+    p, x: jnp.ndarray, cache: dict, bt_rows: jnp.ndarray,
+    kv_len: jnp.ndarray, cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
+) -> tuple[jnp.ndarray, dict]:
+    """One-token decode against the page pool: write the new K/V at the
+    logical tail (ring-wrapped for local layers), read through the block
+    table.  Inactive slots (kv_len == 0) drop their writes — their table
+    rows may hold the sentinel page."""
+    pos = (kv_len - 1)[:, None]                          # [B, 1]
+    q, k_new, v_new = _proj_qkv(p, x, cfg, pos, rt)      # [B, H*, 1, dh]
+    cap = _gqa_capacity(cache, bt_rows, spec)
+    valid = (kv_len > 0)[:, None]
+    k_pages = write_pages(cache["k_pages"], bt_rows, pos,
+                          jnp.moveaxis(k_new, 1, 2), cap, valid)
+    v_pages = write_pages(cache["v_pages"], bt_rows, pos,
+                          jnp.moveaxis(v_new, 1, 2), cap, valid)
+
+    if spec.window is not None:
+        eff_len = jnp.minimum(kv_len, cap)               # ring: all in-window
+        capacity = cap
+    else:
+        eff_len = kv_len
+        capacity = None
+    out = fusemax_decode_paged(
+        q, k_pages, v_pages, bt_rows, eff_len,
+        capacity=capacity,
+        softcap=cfg.attn_softcap,
+        impl=rt.attn_impl,
+        splits=rt.decode_splits,
+        exp_impl=rt.exp_impl,
+        interpret=rt.interpret,
+    )                                                    # [B, H, 1, dh]
+    y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
+    return y, {"k_pages": k_pages, "v_pages": v_pages}
 
 
 # ---------------------------------------------------------------------------
@@ -358,7 +584,7 @@ def mla_decode(
         q_cat, k_cat, v_lat, kv_len,
         scale=1.0 / math.sqrt(m.nope_dim + m.rope_dim),
         softcap=cfg.attn_softcap,
-        impl=rt.attn_impl if rt.attn_impl != "jnp" else "jnp",
+        impl=rt.attn_impl,
         splits=rt.decode_splits,
         exp_impl=rt.exp_impl,
         interpret=rt.interpret,
@@ -366,3 +592,107 @@ def mla_decode(
     out = jnp.einsum("bhsr,rhe->bhse", out_lat, p["w_uv"].astype(dt))
     y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(dt))
     return y, {"ckv": ckv, "krope": krope}
+
+
+# ---------------------------------------------------------------------------
+# MLA — paged cache variants
+# ---------------------------------------------------------------------------
+
+def mla_init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                         dtype) -> dict:
+    m = cfg.mla
+    return {
+        "ckv_pages": jnp.zeros((num_pages, page_size, m.kv_lora_rank),
+                               dtype),
+        "krope_pages": jnp.zeros((num_pages, page_size, m.rope_dim), dtype),
+    }
+
+
+def mla_prefill_paged(
+    p, x: jnp.ndarray, cache: dict, bt_rows: jnp.ndarray, off: int,
+    cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
+    true_len: jnp.ndarray,
+) -> tuple[jnp.ndarray, dict]:
+    """Prefill a prompt chunk's latents straight into the page pool; the
+    chunk's queries attend the full cached prefix gathered through the
+    block-table rows (expanded per-head, mirroring
+    :func:`mla_prefill_chunk`)."""
+    m = cfg.mla
+    b, s_len, _ = x.shape
+    dt = x.dtype
+    positions = jnp.broadcast_to(jnp.arange(off, off + s_len), (b, s_len))
+    q_nope, q_rope, ckv_new, krope_new = _mla_qkv_latent(p, x, cfg,
+                                                         positions)
+    cap = bt_rows.shape[1] * cache["ckv_pages"].shape[1]
+    valid = positions[:1] < true_len[:, None]
+    ckv_pages = write_pages(cache["ckv_pages"], bt_rows, positions,
+                            ckv_new, cap, valid)
+    krope_pages = write_pages(cache["krope_pages"], bt_rows, positions,
+                              krope_new, cap, valid)
+
+    if off == 0:
+        y = mla_forward(p, x, cfg, spec, rt)
+        return y, {"ckv_pages": ckv_pages, "krope_pages": krope_pages}
+
+    tot = off + s_len
+    # gather only the pages the prefix + chunk occupy (tot is static)
+    hp = -(-tot // cache["ckv_pages"].shape[1])
+    ckv = gather_pages(ckv_pages, bt_rows[:, :hp])[:, :tot]
+    krope = gather_pages(krope_pages, bt_rows[:, :hp])[:, :tot]
+    h = cfg.n_heads
+    k_nope = jnp.einsum("bsr,rhe->bhse", ckv, p["w_uk"].astype(dt))
+    v = jnp.einsum("bsr,rhe->bhse", ckv, p["w_uv"].astype(dt))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope,
+         jnp.broadcast_to(krope[:, None], (b, h, tot, m.rope_dim))],
+        axis=-1,
+    )
+    out = fusemax_attention(
+        q, k, v,
+        causal=cfg.causal, softcap=cfg.attn_softcap,
+        scale=1.0 / math.sqrt(m.nope_dim + m.rope_dim), q_offset=off,
+        impl=rt.attn_impl, block_q=rt.block_q, block_k=rt.block_k,
+        exp_impl=rt.exp_impl, interpret=rt.interpret,
+        unroll_scan=rt.unroll_runs,
+    )
+    y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(dt))
+    return y, {"ckv_pages": ckv_pages, "krope_pages": krope_pages}
+
+
+def mla_decode_paged(
+    p, x: jnp.ndarray, cache: dict, bt_rows: jnp.ndarray,
+    kv_len: jnp.ndarray, cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
+) -> tuple[jnp.ndarray, dict]:
+    """Absorbed-form decode against paged latents: write the new latent at
+    the logical tail, gather the table view, score in latent space."""
+    m = cfg.mla
+    dt = x.dtype
+    pos = (kv_len - 1)[:, None]
+    q_nope, q_rope, ckv_new, krope_new = _mla_qkv_latent(p, x, cfg, pos)
+    cap = bt_rows.shape[1] * cache["ckv_pages"].shape[1]
+    valid = (kv_len > 0)[:, None]
+    ckv_pages = write_pages(cache["ckv_pages"], bt_rows, pos, ckv_new,
+                            cap, valid)
+    krope_pages = write_pages(cache["krope_pages"], bt_rows, pos,
+                              krope_new, cap, valid)
+
+    ckv = gather_pages(ckv_pages, bt_rows)               # [B, T, r]
+    krope = gather_pages(krope_pages, bt_rows)
+    q_eff = jnp.einsum("bhse,rhe->bhsr", q_nope, p["w_uk"].astype(dt))
+    q_cat = jnp.concatenate([q_eff, q_rope], axis=-1)    # [B,H,1,r+rd]
+    k_cat = jnp.concatenate([ckv, krope], axis=-1)[:, None]
+    v_lat = ckv[:, None]
+
+    out_lat = fusemax_decode(
+        q_cat, k_cat, v_lat, kv_len,
+        scale=1.0 / math.sqrt(m.nope_dim + m.rope_dim),
+        softcap=cfg.attn_softcap,
+        impl=rt.attn_impl,
+        splits=rt.decode_splits,
+        exp_impl=rt.exp_impl,
+        interpret=rt.interpret,
+    )                                                    # [B,H,1,r]
+    out = jnp.einsum("bhsr,rhe->bhse", out_lat, p["w_uv"].astype(dt))
+    y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(dt))
+    return y, {"ckv_pages": ckv_pages, "krope_pages": krope_pages}

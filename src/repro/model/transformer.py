@@ -11,9 +11,13 @@ Entry points:
   ``init``          → (params, axes)
   ``forward``       → logits   [B, S, vocab]            (training)
   ``loss_fn``       → scalar + metrics                  (training)
-  ``init_cache``    → per-run stacked caches            (serving)
-  ``prefill``       → (last-token logits, caches)       (serving)
+  ``init_cache``    → per-run stacked caches            (serving, dense)
+  ``init_paged_cache`` → per-run page-pool caches       (serving, paged)
+  ``prefill``       → (last-token logits, caches)       (serving; dense
+                      mini-cache or straight into pages via block_tables/
+                      slot_ids; length-bucketed via true_len)
   ``decode_step``   → (logits, caches)                  (serving)
+  ``decode_loop``   → fused multi-step decode           (serving)
 """
 from __future__ import annotations
 
@@ -123,18 +127,31 @@ def layer_init_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
 
 
 def layer_decode(p, x, cache, kv_len, cfg: ModelConfig, spec: LayerSpec,
-                 rt: Runtime):
-    """One-token decode. x: [B, 1, d]; kv_len includes the current token."""
+                 rt: Runtime, block_tables: Optional[dict] = None):
+    """One-token decode. x: [B, 1, d]; kv_len includes the current token.
+    With ``block_tables`` (paged layout — {"full"/"w<N>": [B, W] int32})
+    attention layers read/write the page pool through their table."""
     h = apply_norm(p["ln1"], x, cfg.norm)
     parts = []
     new_cache = dict(cache)
     if spec.attn == "gqa":
-        y, new_cache["attn"] = attn_mod.gqa_decode(
-            p["attn"], h, cache["attn"], kv_len, cfg, spec, rt)
+        if block_tables is not None:
+            y, new_cache["attn"] = attn_mod.gqa_decode_paged(
+                p["attn"], h, cache["attn"],
+                block_tables[attn_mod.paged_cache_key(spec)], kv_len, cfg,
+                spec, rt)
+        else:
+            y, new_cache["attn"] = attn_mod.gqa_decode(
+                p["attn"], h, cache["attn"], kv_len, cfg, spec, rt)
         parts.append(y)
     elif spec.attn == "mla":
-        y, new_cache["attn"] = attn_mod.mla_decode(
-            p["attn"], h, cache["attn"], kv_len, cfg, spec, rt)
+        if block_tables is not None:
+            y, new_cache["attn"] = attn_mod.mla_decode_paged(
+                p["attn"], h, cache["attn"], block_tables["full"], kv_len,
+                cfg, spec, rt)
+        else:
+            y, new_cache["attn"] = attn_mod.mla_decode(
+                p["attn"], h, cache["attn"], kv_len, cfg, spec, rt)
         parts.append(y)
     if spec.ssm == "mamba":
         y, new_cache["ssm"] = ssm_mod.mamba_step(
@@ -336,6 +353,51 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
     return caches
 
 
+def layer_init_paged_cache(cfg: ModelConfig, spec: LayerSpec, slots: int,
+                           num_pages: dict, page_size: int, dtype) -> dict:
+    """Paged counterpart of :func:`layer_init_cache`: attention K/V live in
+    page pools (``num_pages`` keyed like the block tables — "full" /
+    "w<window>"); SSM state stays per-slot dense (it is O(1) per slot)."""
+    cache = {}
+    if spec.attn == "gqa":
+        cache["attn"] = attn_mod.gqa_init_paged_cache(
+            cfg, num_pages[attn_mod.paged_cache_key(spec)], page_size,
+            dtype)
+    elif spec.attn == "mla":
+        cache["attn"] = attn_mod.mla_init_paged_cache(
+            cfg, num_pages["full"], page_size, dtype)
+    if spec.ssm == "mamba":
+        cache["ssm"] = ssm_mod.mamba_init_state(cfg, slots, dtype)
+    elif spec.ssm == "mlstm":
+        cache["ssm"] = ssm_mod.mlstm_init_state(cfg, slots, dtype)
+    elif spec.ssm == "slstm":
+        cache["ssm"] = ssm_mod.slstm_init_state(cfg, slots, dtype)
+    return cache
+
+
+def init_paged_cache(cfg: ModelConfig, slots: int, num_pages: dict,
+                     page_size: int, dtype):
+    """Per-run paged caches mirroring :func:`init_cache`'s tree structure
+    (stacked over repeats), so the scan/unroll machinery and donation work
+    unchanged.  Every layer owns its own page storage; the block tables
+    (one per capacity class, shared by all layers of the class) are managed
+    host-side by :class:`repro.serving.kv_cache.PagedKVCache` and passed
+    per dispatch."""
+    caches = []
+    for pattern, reps in cfg.runs():
+        pos = []
+        for spec in pattern:
+            c1 = layer_init_paged_cache(cfg, spec, slots, num_pages,
+                                        page_size, dtype)
+            if reps > 1:
+                c1 = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (reps, *a.shape)).copy(),
+                    c1)
+            pos.append(c1)
+        caches.append(pos)
+    return caches
+
+
 def cache_axes(cfg: ModelConfig):
     """Structural logical-axes tree mirroring ``init_cache`` output."""
     def layer_axes(spec: LayerSpec) -> dict:
@@ -372,11 +434,14 @@ def cache_axes(cfg: ModelConfig):
 
 
 def decode_step(cfg: ModelConfig, params, token_or_embed, caches,
-                kv_len: jnp.ndarray, rt: Runtime = Runtime()):
+                kv_len: jnp.ndarray, rt: Runtime = Runtime(),
+                block_tables: Optional[dict] = None):
     """One decode step for the whole batch.
 
     token_or_embed: [B, 1] int tokens or [B, 1, d] embeddings.
     kv_len: [B] sequence length *including* the current token.
+    ``block_tables`` selects the paged cache layout (see
+    :func:`layer_decode`); None decodes against dense caches.
     Returns (logits [B, vocab], new_caches).
     """
     batch = {"inputs": token_or_embed}
@@ -387,7 +452,8 @@ def decode_step(cfg: ModelConfig, params, token_or_embed, caches,
         if reps == 1:
             cs = []
             for spec_j, p_j, c_j in zip(pattern, p_run, cache):
-                x, c_new = layer_decode(p_j, x, c_j, kv_len, cfg, spec_j, rt)
+                x, c_new = layer_decode(p_j, x, c_j, kv_len, cfg, spec_j,
+                                        rt, block_tables)
                 cs.append(c_new)
             new_caches.append(cs)
             continue
@@ -400,7 +466,7 @@ def decode_step(cfg: ModelConfig, params, token_or_embed, caches,
                     p_i = jax.tree.map(lambda a: a[i], p_j)
                     c_i = jax.tree.map(lambda a: a[i], c_j)
                     x, c_new = layer_decode(p_i, x, c_i, kv_len, cfg,
-                                            spec_j, rt)
+                                            spec_j, rt, block_tables)
                     outs[j].append(c_new)
             new_caches.append([
                 jax.tree.map(lambda *xs: jnp.stack(xs), *o) for o in outs])
@@ -411,7 +477,7 @@ def decode_step(cfg: ModelConfig, params, token_or_embed, caches,
             cs_out = []
             for spec_j, p_j, c_j in zip(pattern, ps, cs_in):
                 h, c_new = layer_decode(p_j, h, c_j, kv_len, cfg, spec_j,
-                                        rt)
+                                        rt, block_tables)
                 cs_out.append(c_new)
             return h, tuple(cs_out)
 
@@ -426,7 +492,10 @@ def decode_step(cfg: ModelConfig, params, token_or_embed, caches,
 
 
 def prefill(cfg: ModelConfig, params, batch: dict, caches,
-            rt: Runtime = Runtime(), kv_offset: int = 0):
+            rt: Runtime = Runtime(), kv_offset: int = 0,
+            true_len: Optional[jnp.ndarray] = None,
+            block_tables: Optional[dict] = None,
+            slot_ids: Optional[jnp.ndarray] = None):
     """Process a prompt (or prompt chunk), filling caches.  Returns
     (logits_last, caches).
 
@@ -439,9 +508,24 @@ def prefill(cfg: ModelConfig, params, batch: dict, caches,
     [0, kv_offset) must already be cached, and the chunk's queries attend
     the cached history (full caches via q_offset; ring caches via a
     gathered band).  SSM state continues from the cache automatically.
+
+    ``true_len`` ([B] int32, length-bucketed batches): each row's real
+    prompt length inside the padded bucket.  Cache writes and SSM stepping
+    past a row's true length are masked, and the returned logits are
+    gathered at each row's last real token *within this chunk* (rows whose
+    last token lies in another chunk return garbage — the caller selects).
+
+    ``block_tables`` + ``slot_ids`` switch to the *paged* layout: caches
+    must come from :func:`init_paged_cache`, attention K/V scatter into
+    page pools through ``block_tables[...][slot_ids]``, and SSM states live
+    in the slot rows ``slot_ids`` of the full [slots, ...] state arrays
+    (reset at kv_offset == 0 — admission semantics).  No dense mini-cache
+    is materialized.
     """
     x = _embed_inputs(cfg, params, batch, rt)
     s_len = x.shape[1]
+    if slot_ids is not None and true_len is None:
+        true_len = jnp.full((x.shape[0],), kv_offset + s_len, jnp.int32)
     new_caches = []
     for (pattern, reps), p_run, cache in zip(cfg.runs(), params["runs"],
                                              caches):
@@ -449,7 +533,8 @@ def prefill(cfg: ModelConfig, params, batch: dict, caches,
             cs = []
             for spec_j, p_j, c_j in zip(pattern, p_run, cache):
                 x, c_new = _prefill_layer(p_j, x, c_j, cfg, spec_j, rt,
-                                          s_len, kv_offset)
+                                          s_len, kv_offset, true_len,
+                                          block_tables, slot_ids)
                 cs.append(c_new)
             new_caches.append(cs)
             continue
@@ -462,7 +547,8 @@ def prefill(cfg: ModelConfig, params, batch: dict, caches,
                     p_i = jax.tree.map(lambda a: a[i], p_j)
                     c_i = jax.tree.map(lambda a: a[i], c_j)
                     x, c_new = _prefill_layer(p_i, x, c_i, cfg, spec_j, rt,
-                                              s_len, kv_offset)
+                                              s_len, kv_offset, true_len,
+                                              block_tables, slot_ids)
                     outs[j].append(c_new)
             new_caches.append([
                 jax.tree.map(lambda *xs: jnp.stack(xs), *o) for o in outs])
@@ -473,7 +559,8 @@ def prefill(cfg: ModelConfig, params, batch: dict, caches,
             cs_out = []
             for spec_j, p_j, c_j in zip(pattern, ps, cs_in):
                 h, c_new = _prefill_layer(p_j, h, c_j, cfg, spec_j, rt,
-                                          s_len, kv_offset)
+                                          s_len, kv_offset, true_len,
+                                          block_tables, slot_ids)
                 cs_out.append(c_new)
             return h, tuple(cs_out)
 
@@ -481,24 +568,39 @@ def prefill(cfg: ModelConfig, params, batch: dict, caches,
         new_caches.append(list(c))
     x = apply_norm(params["final_norm"], x, cfg.norm)
     head = params["embed"] if cfg.tie_embeddings else params["unembed"]
-    logits = unembed(head, x[:, -1])
+    if true_len is None:
+        last = x[:, -1]
+    else:
+        idx = jnp.clip(true_len - 1 - kv_offset, 0, s_len - 1)
+        last = x[jnp.arange(x.shape[0]), idx]
+    logits = unembed(head, last)
     logits = rt.shard_activation(logits, ("batch", "vocab"))
     logits = softcap(logits, cfg.final_softcap)
     return logits, new_caches
 
 
-def _prefill_layer(p, x, cache, cfg, spec, rt, s_len, kv_offset=0):
+def _prefill_layer(p, x, cache, cfg, spec, rt, s_len, kv_offset=0,
+                   true_len=None, block_tables=None, slot_ids=None):
     """Layer forward that also populates the serving cache.  With
     ``kv_offset > 0`` (chunked-prefill continuation) attention layers
     attend the cached history via the ``*_prefill_chunk`` paths; SSM
-    layers continue from the cached state either way."""
+    layers continue from the cached state either way.  ``true_len`` masks
+    writes/stepping for padded bucket tails; ``block_tables``/``slot_ids``
+    select the paged layout (see :func:`prefill`)."""
+    paged = slot_ids is not None
     h = apply_norm(p["ln1"], x, cfg.norm)
     parts = []
     new_cache = dict(cache)
     if spec.attn == "gqa":
-        if kv_offset:
+        if paged:
+            bt_rows = block_tables[attn_mod.paged_cache_key(spec)][slot_ids]
+            y, new_cache["attn"] = attn_mod.gqa_prefill_paged(
+                p["attn"], h, cache["attn"], bt_rows, kv_offset, cfg, spec,
+                rt, true_len)
+        elif kv_offset:
             y, new_cache["attn"] = attn_mod.gqa_prefill_chunk(
-                p["attn"], h, cache["attn"], kv_offset, cfg, spec, rt)
+                p["attn"], h, cache["attn"], kv_offset, cfg, spec, rt,
+                true_len)
         else:
             y = attn_mod.gqa_forward(p["attn"], h, cfg, spec, rt)
             positions = jnp.broadcast_to(
@@ -506,7 +608,13 @@ def _prefill_layer(p, x, cache, cfg, spec, rt, s_len, kv_offset=0):
             _, k_new, v_new = attn_mod._proj_qkv(p["attn"], h, cfg,
                                                  positions, rt)
             slots = cache["attn"]["k"].shape[2]
-            if slots >= s_len:
+            if spec.window is not None and true_len is not None:
+                # ring + bucket padding: shared masked ring scatter keeps
+                # the last min(true_len, window) real positions per row
+                kc, vc = attn_mod.ring_write_masked(
+                    cache["attn"]["k"], cache["attn"]["v"], k_new, v_new,
+                    0, true_len)
+            elif slots >= s_len:
                 kc = cache["attn"]["k"].at[:, :, :s_len].set(k_new)
                 vc = cache["attn"]["v"].at[:, :, :s_len].set(v_new)
             else:  # ring: keep the trailing `slots` positions
@@ -519,7 +627,11 @@ def _prefill_layer(p, x, cache, cfg, spec, rt, s_len, kv_offset=0):
             new_cache["attn"] = {"k": kc, "v": vc}
         parts.append(y)
     elif spec.attn == "mla":
-        if kv_offset:
+        if paged:
+            y, new_cache["attn"] = attn_mod.mla_prefill_paged(
+                p["attn"], h, cache["attn"], block_tables["full"][slot_ids],
+                kv_offset, cfg, spec, rt, true_len)
+        elif kv_offset:
             y, new_cache["attn"] = attn_mod.mla_prefill_chunk(
                 p["attn"], h, cache["attn"], kv_offset, cfg, spec, rt)
         else:
@@ -534,8 +646,30 @@ def _prefill_layer(p, x, cache, cfg, spec, rt, s_len, kv_offset=0):
             }
         parts.append(y)
     if spec.ssm is not None:
-        y, st = _prefill_ssm(p["ssm"], h, cache["ssm"], cfg, spec, rt)
-        new_cache["ssm"] = st
+        if paged:
+            # paged layout keeps SSM state in the slot rows of the full
+            # [slots, ...] arrays: gather the admitted rows (fresh state at
+            # admission), step them, scatter back
+            state = jax.tree.map(lambda a: a[slot_ids], cache["ssm"])
+            if kv_offset == 0:
+                n = x.shape[0]
+                dtype = state["conv"].dtype if "conv" in state \
+                    else jnp.float32
+                if spec.ssm == "mamba":
+                    state = ssm_mod.mamba_init_state(cfg, n, dtype)
+                elif spec.ssm == "mlstm":
+                    state = ssm_mod.mlstm_init_state(cfg, n, dtype)
+                else:
+                    state = ssm_mod.slstm_init_state(cfg, n, dtype)
+            y, st = _prefill_ssm(p["ssm"], h, state, cfg, spec, rt,
+                                 true_len, kv_offset)
+            new_cache["ssm"] = jax.tree.map(
+                lambda a, r: a.at[slot_ids].set(r.astype(a.dtype)),
+                cache["ssm"], st)
+        else:
+            y, st = _prefill_ssm(p["ssm"], h, cache["ssm"], cfg, spec, rt,
+                                 true_len, kv_offset)
+            new_cache["ssm"] = st
         parts.append(y)
     y = parts[0] if len(parts) == 1 else sum(parts) / len(parts)
     if "post1" in p:
@@ -551,9 +685,14 @@ def _prefill_layer(p, x, cache, cfg, spec, rt, s_len, kv_offset=0):
     return x, new_cache
 
 
-def _prefill_ssm(p, h, state, cfg, spec, rt):
+def _prefill_ssm(p, h, state, cfg, spec, rt, true_len=None, kv_offset=0):
     """Run the SSM over the prompt sequentially via its step function —
-    exact state handoff (the chunked trainer path has no state output)."""
+    exact state handoff (the chunked trainer path has no state output).
+
+    ``true_len`` enables *masked stepping* for length-bucketed batches:
+    rows whose real prompt ended before global position kv_offset + t keep
+    their state frozen through the padded tail, so the handed-off state is
+    exactly the state after the last real token."""
     if spec.ssm == "mamba":
         step = functools.partial(ssm_mod.mamba_step, p, cfg=cfg, rt=rt)
     elif spec.ssm == "mlstm":
@@ -561,11 +700,19 @@ def _prefill_ssm(p, h, state, cfg, spec, rt):
     else:
         step = functools.partial(ssm_mod.slstm_step, p, cfg=cfg, rt=rt)
 
-    def body(st, ht):
-        y, st = step(ht[:, None], st)
-        return st, y[:, 0]
+    def body(st, xs):
+        t, ht = xs
+        y, st_new = step(ht[:, None], st)
+        if true_len is not None:
+            keep = (kv_offset + t) < true_len            # [B]
+            st_new = jax.tree.map(
+                lambda new, old: jnp.where(
+                    keep.reshape((-1,) + (1,) * (new.ndim - 1)), new, old),
+                st_new, st)
+        return st_new, y[:, 0]
 
-    st, ys = jax.lax.scan(body, state, jnp.moveaxis(h, 0, 1))
+    st, ys = jax.lax.scan(
+        body, state, (jnp.arange(h.shape[1]), jnp.moveaxis(h, 0, 1)))
     return jnp.moveaxis(ys, 0, 1), st
 
 
@@ -597,7 +744,8 @@ def scatter_cache_slots(cfg: ModelConfig, caches, sub, slot_ids):
 
 def decode_loop(cfg: ModelConfig, params, caches, kv_len, last_logits,
                 remaining, key, *, n_steps: int, rt: Runtime = Runtime(),
-                temperature: float = 0.0):
+                temperature: float = 0.0,
+                block_tables: Optional[dict] = None):
     """Fused multi-step decode: one dispatch advances every slot by up to
     ``n_steps`` tokens, sampling on-device.
 
@@ -614,6 +762,10 @@ def decode_loop(cfg: ModelConfig, params, caches, kv_len, last_logits,
     without paying for masked tail steps.  Greedy (``temperature <= 0``)
     token streams are bit-identical to per-token :func:`decode_step`
     calls; sampled streams draw one key per step via ``jax.random.split``.
+
+    ``block_tables`` (paged layout) is loop-invariant: the engine reserves
+    pages covering every slot's worst-case growth for the chunk *before*
+    dispatching, so no allocation can be needed mid-loop.
     """
     b = kv_len.shape[0]
     toks0 = jnp.zeros((n_steps, b), jnp.int32)
@@ -635,7 +787,7 @@ def decode_loop(cfg: ModelConfig, params, caches, kv_len, last_logits,
         toks = jax.lax.dynamic_update_index_in_dim(toks, nxt, i, 0)
         kv_new = kv_len + active.astype(jnp.int32)
         new_logits, caches = decode_step(cfg, params, nxt[:, None], caches,
-                                         kv_new, rt)
+                                         kv_new, rt, block_tables)
         logits = jnp.where(active[:, None],
                            new_logits.astype(logits.dtype), logits)
         return (i + 1, caches, kv_new, logits,

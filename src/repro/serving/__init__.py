@@ -2,6 +2,7 @@ from repro.serving.engine import (
     Request, ServeEngine, enable_compilation_cache, make_decode_loop,
     make_prefill_step, make_serve_step, sample_logits,
 )
-__all__ = ["Request", "ServeEngine", "enable_compilation_cache",
-           "make_decode_loop", "make_prefill_step", "make_serve_step",
-           "sample_logits"]
+from repro.serving.kv_cache import PagePool, PagedKVCache
+__all__ = ["PagePool", "PagedKVCache", "Request", "ServeEngine",
+           "enable_compilation_cache", "make_decode_loop",
+           "make_prefill_step", "make_serve_step", "sample_logits"]

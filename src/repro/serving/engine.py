@@ -5,29 +5,50 @@ batching): requests occupy slots; each slot has its own ``kv_len``; decode
 runs the whole batch through the fused ``transformer.decode_loop`` (the
 FuseMax split-K decode kernel handles per-slot ragged lengths in-kernel via
 scalar prefetch).  Finished slots are refilled from the queue — the
-standard production pattern (vLLM-style, dense-cache variant).
+standard production pattern (vLLM-style).
+
+Two cache layouts, A/B-able via ``cache_layout`` and bit-identical under
+greedy decoding:
+
+  * ``"dense"`` — per-slot ``[slots, max_len]`` rows (the classic layout):
+    admission needs only a free slot, memory is reserved up front.
+  * ``"paged"`` — a page pool with per-slot block tables
+    (:mod:`repro.serving.kv_cache`): resident memory tracks live tokens,
+    and admission is *pages + slot* — a request enters as soon as a slot
+    is free AND its prompt's pages fit the pool.  Slots grow page-by-page
+    as they decode; on pool exhaustion the youngest slot is preempted back
+    to the queue (recompute-style: its prompt + generated tokens re-prefill
+    on re-admission, which reproduces the greedy stream exactly), and
+    completed requests return their pages to the free list.
 
 The hot path is device-resident end-to-end:
 
-  * **Batched chunked prefill** — admitted prompts are grouped by length
-    and written into their slots' cache rows with ONE jit'd call per group
-    (``tf.prefill`` into a fresh mini-cache + ``tf.scatter_cache_slots``),
-    so prefill dispatch count is independent of prompt length.  Long
-    prompts are processed in ``prefill_chunk``-sized pieces *inside* the
-    same jit'd call (``kv_offset`` continuation) to bound activation
-    memory.
+  * **Batched bucketed prefill** — admitted prompts are padded to
+    power-of-two length buckets and grouped, then written into their cache
+    slots with ONE jit'd call per bucket (dense: fresh mini-cache +
+    ``tf.scatter_cache_slots``; paged: straight into the page pool through
+    the block tables — no mini-cache materialized).  Jit keys are
+    (group width, bucket), so a fresh prompt length no longer triggers a
+    fresh compile: padded tails are masked (ring writes, page writes, SSM
+    stepping) via ``true_len`` and each row's logits are gathered at its
+    real last token.  Long prompts are processed in ``prefill_chunk``-sized
+    pieces *inside* the same jit'd call (``kv_offset`` continuation).
   * **Fused multi-step decode** — one jit'd ``lax.while_loop`` (with
     on-device early exit once every slot's budget is spent) samples,
     appends to the cache, and advances ``kv_len`` for up to
     ``decode_chunk`` tokens per dispatch; caches and per-slot state are
     donated so no per-step copy survives (donation is a no-op on CPU).
+    For the paged layout the engine reserves every slot's worst-case page
+    growth for the chunk *before* dispatching, so the block tables are
+    loop-invariant on device.
   * Host work per decode dispatch is one small transfer (the [N, slots]
-    token block) plus queue bookkeeping.
+    token block) plus queue/free-list bookkeeping.
 
-Greedy (temperature=0) token streams are bit-identical to the per-token
-reference path (prompt streamed through ``decode_step``): slots are
-independent through every layer, and the fused loop replays the exact
-per-step sampling/advance order.
+Greedy (temperature=0) token streams are bit-identical between the two
+layouts and match the per-token reference path: slots are independent
+through every layer, the paged read path sees the very same [*, M, *]
+arrays the dense path does (gather through the table), and the fused loop
+replays the exact per-step sampling/advance order.
 
 ``make_serve_step`` / ``make_prefill_step`` / ``make_decode_loop`` build
 the jit-able functions the launcher binds to a mesh (these are what the
@@ -37,7 +58,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Iterable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +68,7 @@ from repro.configs.base import ModelConfig
 from repro.kernels.autotune import next_pow2
 from repro.model import transformer as tf
 from repro.model.layers import Runtime
+from repro.serving.kv_cache import PagedKVCache
 
 
 def enable_compilation_cache(path: Optional[str] = None) -> Optional[str]:
@@ -125,23 +147,30 @@ class Request:
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
     ttft: Optional[float] = None       # seconds, submit → first token known
+    preemptions: int = 0               # times bounced back to the queue
 
 
 class ServeEngine:
     """Continuous-batching engine over a fixed slot count.
 
-    Host-side orchestration (queueing, slot management) around two jit'd
-    device programs: slot-batched prefill and the fused multi-step decode
-    loop.  ``stats`` counts device dispatches so callers can assert the
-    dispatch economics (prefill dispatches independent of prompt length;
-    decode dispatches ≈ tokens / decode_chunk).
+    Host-side orchestration (queueing, slot + page management) around two
+    jit'd device programs: bucket-batched prefill and the fused multi-step
+    decode loop.  ``stats`` counts device dispatches so callers can assert
+    the dispatch economics (prefill dispatches independent of prompt
+    length; decode dispatches ≈ tokens / decode_chunk); ``memory_stats``
+    reports cache residency for the layout A/B.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int,
                  max_len: int, rt: Runtime = Runtime(),
                  temperature: float = 0.0, dtype=jnp.float32,
                  decode_chunk: int = 16,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 cache_layout: str = "dense",
+                 page_size: int = 16,
+                 num_pages: Optional[int] = None):
+        if cache_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown cache_layout: {cache_layout!r}")
         self.cfg = cfg
         self.params = params
         self.rt = rt
@@ -152,7 +181,15 @@ class ServeEngine:
         self.prefill_chunk = None if prefill_chunk is None \
             else max(1, prefill_chunk)
         self.cache_dtype = dtype
-        self.caches = tf.init_cache(cfg, slots, max_len, dtype)
+        self.cache_layout = cache_layout
+        if cache_layout == "paged":
+            self.kv = PagedKVCache(cfg, slots, max_len, dtype,
+                                   page_size=page_size,
+                                   num_pages=num_pages)
+            self.caches = self.kv.caches
+        else:
+            self.kv = None
+            self.caches = tf.init_cache(cfg, slots, max_len, dtype)
         # host mirrors of per-slot state (device copies live in _kv_len &c)
         self.kv_len = np.zeros((slots,), np.int32)
         self.remaining = np.zeros((slots,), np.int32)
@@ -164,8 +201,11 @@ class ServeEngine:
         self._last_logits = jnp.zeros((slots, cfg.vocab), jnp.float32)
         self._prefill_fns: dict[tuple, Callable] = {}
         self._loop_fns: dict[int, Callable] = {}
+        self._admit_seq = 0
+        self._order = [0] * slots          # admission sequence per slot
         self.stats = {"prefill_dispatches": 0, "decode_dispatches": 0,
-                      "decode_steps": 0, "tokens_decoded": 0}
+                      "decode_steps": 0, "tokens_decoded": 0,
+                      "preemptions": 0, "peak_live_tokens": 0}
 
     # -- jit caches ---------------------------------------------------------
 
@@ -173,36 +213,69 @@ class ServeEngine:
         # buffer donation is unimplemented on CPU and warns per call
         return argnums if jax.default_backend() != "cpu" else ()
 
+    def _bucket(self, s: int) -> int:
+        """Pad prompt lengths to power-of-two buckets (capped at max_len)
+        so prefill jit keys are per-bucket, not per-exact-length."""
+        return min(next_pow2(s), self.max_len)
+
+    def _prefill_pieces(self, s: int) -> list[tuple[int, int]]:
+        chunk = self.prefill_chunk
+        if chunk is None or s <= chunk:
+            return [(0, s)]
+        pieces, off = [], 0
+        while off < s:                       # static unroll
+            c = min(chunk, s - off)
+            pieces.append((off, c))
+            off += c
+        return pieces
+
     def _get_prefill(self, n: int, s: int) -> Callable:
-        """Jit'd: prefill ``n`` prompts of length ``s`` into slot rows."""
+        """Jit'd: prefill ``n`` prompts padded to bucket length ``s`` into
+        slot rows (dense) or pages (paged); per-row real lengths arrive as
+        the ``true_len`` device argument, so the jit key is (n, s) only."""
         fn = self._prefill_fns.get((n, s))
         if fn is not None:
             return fn
         cfg, rt = self.cfg, self.rt
         max_len, dtype = self.max_len, self.cache_dtype
-        chunk = self.prefill_chunk
+        pieces = self._prefill_pieces(s)
+        paged = self.kv is not None
 
-        def prefill_into_slots(params, tokens, caches, slot_ids,
-                               last_logits):
-            mini = tf.init_cache(cfg, n, max_len, dtype)
-            if chunk is None or s <= chunk:
-                logits, mini = tf.prefill(cfg, params, {"inputs": tokens},
-                                          mini, rt)
-            else:
-                off = 0
-                logits = None
-                while off < s:                       # static unroll
-                    c = min(chunk, s - off)
-                    logits, mini = tf.prefill(
+        def select_last(logits, lg, true_len, off, c):
+            sel = (true_len - 1 >= off) & (true_len - 1 < off + c)
+            return jnp.where(sel[:, None], lg.astype(logits.dtype), logits)
+
+        if paged:
+            def prefill_into_slots(params, tokens, caches, tables,
+                                   slot_ids, true_len, last_logits):
+                logits = jnp.zeros((n, cfg.vocab), jnp.float32)
+                for off, c in pieces:
+                    lg, caches = tf.prefill(
                         cfg, params, {"inputs": tokens[:, off:off + c]},
-                        mini, rt, kv_offset=off)
-                    off += c
-            caches = tf.scatter_cache_slots(cfg, caches, mini, slot_ids)
-            last_logits = last_logits.at[slot_ids].set(
-                logits.astype(last_logits.dtype))
-            return last_logits, caches
+                        caches, rt, kv_offset=off, true_len=true_len,
+                        block_tables=tables, slot_ids=slot_ids)
+                    logits = select_last(logits, lg, true_len, off, c)
+                last_logits = last_logits.at[slot_ids].set(logits)
+                return last_logits, caches
 
-        fn = jax.jit(prefill_into_slots, donate_argnums=self._donate((2, 4)))
+            fn = jax.jit(prefill_into_slots,
+                         donate_argnums=self._donate((2, 6)))
+        else:
+            def prefill_into_slots(params, tokens, caches, slot_ids,
+                                   true_len, last_logits):
+                mini = tf.init_cache(cfg, n, max_len, dtype)
+                logits = jnp.zeros((n, cfg.vocab), jnp.float32)
+                for off, c in pieces:
+                    lg, mini = tf.prefill(
+                        cfg, params, {"inputs": tokens[:, off:off + c]},
+                        mini, rt, kv_offset=off, true_len=true_len)
+                    logits = select_last(logits, lg, true_len, off, c)
+                caches = tf.scatter_cache_slots(cfg, caches, mini, slot_ids)
+                last_logits = last_logits.at[slot_ids].set(logits)
+                return last_logits, caches
+
+            fn = jax.jit(prefill_into_slots,
+                         donate_argnums=self._donate((2, 5)))
         self._prefill_fns[(n, s)] = fn
         return fn
 
@@ -210,40 +283,58 @@ class ServeEngine:
         fn = self._loop_fns.get(n_steps)
         if fn is not None:
             return fn
-        loop = make_decode_loop(self.cfg, n_steps, self.rt, self.temperature)
+        cfg, rt, temperature = self.cfg, self.rt, self.temperature
+        if self.kv is not None:
+            def loop(params, caches, kv_len, last_logits, remaining, key,
+                     tables):
+                return tf.decode_loop(
+                    cfg, params, caches, kv_len, last_logits, remaining,
+                    key, n_steps=n_steps, rt=rt, temperature=temperature,
+                    block_tables=tables)
+        else:
+            loop = make_decode_loop(cfg, n_steps, rt, temperature)
         fn = jax.jit(loop, donate_argnums=self._donate((1, 2, 3, 4, 5)))
         self._loop_fns[n_steps] = fn
         return fn
 
     # -- request flow -------------------------------------------------------
 
-    def warmup(self, prompt_len: int) -> float:
+    def warmup(self, prompt_len: Union[int, Iterable[int]]) -> float:
         """Deploy-time warmup: trigger (or deserialize from the persistent
         compilation cache) the prefill and decode executables for this
-        workload shape by serving one throwaway full-slot trace, then reset
+        workload shape by serving throwaway full-slot traces, then reset
         the serving state.  Returns the seconds spent.
 
         Standard serving practice — run before accepting traffic so
         steady-state tok/s and per-request TTFT don't pay first-use costs.
-        One trace per possible admission width (powers of two up to the
-        slot count) covers every prefill jit key this prompt length can
-        produce, plus the decode loops (1 and ``decode_chunk``).
+        ``prompt_len`` may be a single length or an iterable (mixed-length
+        traffic): one trace per (admission-width power of two, length
+        bucket) covers every prefill jit key those lengths can produce,
+        plus the decode loops (1 and ``decode_chunk``).
         """
         t0 = time.perf_counter()
+        lens = (prompt_len,) if isinstance(prompt_len, int) else prompt_len
+        buckets = sorted({self._bucket(max(1, min(p, self.max_len - 1)))
+                          for p in lens})
         counts = {self.slots} | {1 << i
                                  for i in range((self.slots - 1).bit_length())}
-        for count in sorted(counts, reverse=True):
-            dummies = [Request(rid=-1 - i,
-                               prompt=np.zeros((prompt_len,), np.int32),
-                               max_new_tokens=self.decode_chunk)
-                       for i in range(count)]
-            for r in dummies:
-                self.submit(r)
-            self.run()
-        # slots auto-freed on completion; dummy cache rows are fully
-        # overwritten by the next admission's scatter.  Reset counters.
+        for b in buckets:
+            plen = min(b, self.max_len - 1)
+            for count in sorted(counts, reverse=True):
+                dummies = [Request(rid=-1 - i,
+                                   prompt=np.zeros((plen,), np.int32),
+                                   max_new_tokens=self.decode_chunk)
+                           for i in range(count)]
+                for r in dummies:
+                    self.submit(r)
+                self.run()
+        # slots auto-freed on completion; dummy cache rows/pages are fully
+        # overwritten by the next admission.  Reset counters.
         for k in self.stats:
             self.stats[k] = 0
+        if self.kv is not None:
+            for c in self.kv.classes.values():
+                c.pool.peak_in_use = 0
         return time.perf_counter() - t0
 
     def submit(self, req: Request) -> None:
@@ -251,45 +342,117 @@ class ServeEngine:
             raise ValueError(
                 f"prompt length {len(req.prompt)} needs at least one free "
                 f"cache slot for decode (max_len={self.max_len})")
+        if self.kv is not None:
+            self.kv.validate_request(len(req.prompt) + req.max_new_tokens)
         req._t_submit = time.perf_counter()
         self.queue.append(req)
 
+    @staticmethod
+    def _resume_tokens(req: Request) -> np.ndarray:
+        """Prompt to prefill at (re-)admission: after a preemption the
+        generated tokens are replayed as prompt — greedy continuation is
+        then exactly the uninterrupted stream (recompute preemption)."""
+        if req.generated:
+            return np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(req.generated, np.int32)])
+        return np.asarray(req.prompt, np.int32)
+
     def _admit(self) -> None:
-        """Fill free slots from the queue: one batched prefill dispatch per
-        distinct prompt length (dispatch count independent of the length)."""
-        admitted: list[tuple[int, Request]] = []
+        """Fill free slots from the queue.  Dense layout: admission = a
+        free slot.  Paged layout: admission = free slot AND the prompt's
+        pages (+1 decode token) fit every pool — continuous batching
+        backed by actual memory, not worst-case rows.  One batched prefill
+        dispatch per length bucket."""
+        admitted: list[tuple[int, Request, np.ndarray]] = []
         for i in range(self.slots):
-            if self.active[i] is None and self.queue:
-                req = self.queue.pop(0)
-                self.active[i] = req
-                admitted.append((i, req))
+            if self.active[i] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            tokens = self._resume_tokens(req)
+            if self.kv is not None and \
+                    not self.kv.grow(i, len(tokens) + 1):
+                break                    # head-of-line waits for pages
+            self.queue.pop(0)
+            self.active[i] = req
+            self._admit_seq += 1
+            self._order[i] = self._admit_seq
+            admitted.append((i, req, tokens))
         if not admitted:
             return
-        by_len: dict[int, list] = {}
-        for slot, req in admitted:
-            by_len.setdefault(len(req.prompt), []).append((slot, req))
-        for s, group in sorted(by_len.items()):
+        by_bucket: dict[int, list] = {}
+        for slot, req, tokens in admitted:
+            by_bucket.setdefault(self._bucket(len(tokens)), []).append(
+                (slot, req, tokens))
+        for sb, group in sorted(by_bucket.items()):
             # pad the group to the next power of two (duplicate rows
             # scatter the same data twice — deterministic): bounded jit
-            # keys per prompt length without paying full-slot-width
-            # prefill FLOPs for a single late admission
+            # keys per bucket without paying full-slot-width prefill FLOPs
+            # for a single late admission
             width = next_pow2(len(group))
             padded = group + [group[-1]] * (width - len(group))
             slot_ids = np.array([g[0] for g in padded], np.int32)
-            toks = np.stack([g[1].prompt for g in padded]).astype(np.int32)
-            fn = self._get_prefill(len(padded), s)
-            self._last_logits, self.caches = fn(
-                self.params, jnp.asarray(toks), self.caches,
-                jnp.asarray(slot_ids), self._last_logits)
+            true_len = np.array([len(g[2]) for g in padded], np.int32)
+            toks = np.zeros((len(padded), sb), np.int32)
+            for r, (_, _, t) in enumerate(padded):
+                toks[r, :len(t)] = t
+            fn = self._get_prefill(len(padded), sb)
+            if self.kv is not None:
+                self._last_logits, self.caches = fn(
+                    self.params, jnp.asarray(toks), self.caches,
+                    self.kv.tables(), jnp.asarray(slot_ids),
+                    jnp.asarray(true_len), self._last_logits)
+            else:
+                self._last_logits, self.caches = fn(
+                    self.params, jnp.asarray(toks), self.caches,
+                    jnp.asarray(slot_ids), jnp.asarray(true_len),
+                    self._last_logits)
             self.stats["prefill_dispatches"] += 1
-            for slot, req in group:
+            for slot, req, tokens in group:
+                s = len(tokens)
                 self.kv_len[slot] = s
+                budget = req.max_new_tokens - len(req.generated)
                 # ≥1 token always (the seed engine's semantics), bounded by
                 # the request and the cache capacity
                 self.remaining[slot] = min(
-                    req.max_new_tokens, max(1, self.max_len - 1 - s))
-        self._kv_len = jnp.asarray(self.kv_len)
-        self._remaining = jnp.asarray(self.remaining)
+                    budget, max(1, self.max_len - 1 - s))
+        self._sync_live_peak()
+
+    def _preempt(self, slot: int) -> None:
+        """Bounce a slot back to the head of the queue, releasing its
+        pages (recompute preemption — see :func:`_resume_tokens`)."""
+        req = self.active[slot]
+        self.kv.release(slot)
+        self.active[slot] = None
+        self.kv_len[slot] = 0
+        self.remaining[slot] = 0
+        req.preemptions += 1
+        self.stats["preemptions"] += 1
+        self.queue.insert(0, req)
+
+    def _ensure_pages(self, n: int) -> None:
+        """Reserve every active slot's worst-case page growth for an
+        ``n``-step decode chunk, oldest slot first; on pool exhaustion the
+        *youngest* active slot is preempted (so the oldest always makes
+        progress — the classic anti-livelock order)."""
+        if self.kv is None:
+            return
+        order = sorted((i for i, r in enumerate(self.active)
+                        if r is not None), key=lambda i: self._order[i])
+        for i in order:
+            while self.active[i] is not None:
+                target = int(self.kv_len[i]) + \
+                    int(min(n, self.remaining[i]))
+                if self.kv.grow(i, target):
+                    break
+                act = [j for j, r in enumerate(self.active)
+                       if r is not None]
+                victim = max(act, key=lambda j: self._order[j])
+                self._preempt(victim)
+
+    def _sync_live_peak(self) -> None:
+        self.stats["peak_live_tokens"] = max(
+            self.stats["peak_live_tokens"], int(self.kv_len.sum()))
 
     def _decode_chunk(self) -> None:
         """One fused dispatch: up to ``decode_chunk`` tokens for every
@@ -297,7 +460,6 @@ class ServeEngine:
         act = [i for i, r in enumerate(self.active) if r is not None]
         if not act:
             return
-        rem_before = self.remaining.copy()
         if any(not self.active[i].generated for i in act):
             # freshly admitted slot: run a single step first so its first
             # token reaches the host immediately — keeps the reported TTFT
@@ -308,11 +470,20 @@ class ServeEngine:
             # full-chunk n costs nothing when fewer steps are needed; two
             # jit keys total {1, decode_chunk} — both built by warmup()
             n = self.decode_chunk
+        self._ensure_pages(n)          # may preempt → recompute the batch
+        act = [i for i, r in enumerate(self.active) if r is not None]
+        if not act:
+            return
+        rem_before = self.remaining.copy()
+        self._kv_len = jnp.asarray(self.kv_len)
+        self._remaining = jnp.asarray(self.remaining)
         fn = self._get_loop(n)
-        toks, self.caches, self._kv_len, self._last_logits, \
-            self._remaining, self.key, steps = fn(
-                self.params, self.caches, self._kv_len, self._last_logits,
+        args = (self.params, self.caches, self._kv_len, self._last_logits,
                 self._remaining, self.key)
+        if self.kv is not None:
+            args = args + (self.kv.tables(),)
+        toks, self.caches, self._kv_len, self._last_logits, \
+            self._remaining, self.key, steps = fn(*args)
         self.stats["decode_dispatches"] += 1
         self.stats["decode_steps"] += int(steps)
 
@@ -320,6 +491,7 @@ class ServeEngine:
         now = time.perf_counter()
         self.kv_len = np.array(self._kv_len)          # writable host mirrors
         self.remaining = np.array(self._remaining)
+        self._sync_live_peak()
         for i in act:
             req = self.active[i]
             take = int(min(n, rem_before[i]))
@@ -332,6 +504,8 @@ class ServeEngine:
                 req.done = True
                 self.active[i] = None
                 self.kv_len[i] = 0
+                if self.kv is not None:
+                    self.kv.release(i)
 
     def step(self) -> None:
         """Admit waiting requests, then run one fused decode dispatch."""
@@ -344,3 +518,35 @@ class ServeEngine:
                 and steps < max_steps:
             self.step()
             steps += 1
+
+    # -- accounting ---------------------------------------------------------
+
+    def memory_stats(self) -> dict:
+        """Cache-memory accounting for the layout A/B (see
+        ``benchmarks/serving_bench.py``).  ``resident_cache_bytes`` is what
+        actually holds live tokens: the whole allocation for the dense
+        layout, pages-in-use for the paged one."""
+        peak_live = max(1, self.stats["peak_live_tokens"])
+        if self.kv is not None:
+            m = self.kv.memory_stats()
+            m["layout"] = "paged"
+            m["bytes_per_live_token"] = round(
+                m["peak_resident_cache_bytes"] / peak_live, 1)
+            return m
+        # mirror the paged accounting: attention caches vs O(slots) SSM
+        # state, so the layout A/B compares like with like
+        attn = ssm = 0
+        for run in self.caches:
+            for layer in run:
+                attn += sum(x.nbytes
+                            for x in jax.tree.leaves(layer.get("attn", {})))
+                ssm += sum(x.nbytes
+                           for x in jax.tree.leaves(layer.get("ssm", {})))
+        return {
+            "layout": "dense",
+            "resident_cache_bytes": attn,
+            "peak_resident_cache_bytes": attn,
+            "physical_cache_bytes": attn,
+            "ssm_state_bytes": ssm,
+            "bytes_per_live_token": round(attn / peak_live, 1),
+        }

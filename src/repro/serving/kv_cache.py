@@ -1,0 +1,258 @@
+"""Paged KV-cache subsystem: page pool + per-slot block-table indirection.
+
+The dense serving layout reserves ``slots × max_len`` cache rows up front,
+so resident memory is fixed by the worst-case sequence.  This module makes
+resident bytes track *live tokens* instead — the off-chip analogue of the
+paper's M-independent on-chip buffering:
+
+    layer storage (device, one per layer)     block table (host-mirrored,
+    [num_pages, page_size, Hkv, dh]           one per capacity class,
+                                              shared by all its layers)
+    ┌────────┐                                 slot 0: [ 3, 7, 1, -]
+    │ page 0 │◄───────┐                        slot 1: [ 0, 4, -, -]
+    │ page 1 │◄─────┐ │                        slot 2: [ 6, 2, 5, 8]
+    │ page 2 │      │ │
+    │  ...   │      │ └─ token at position p lives at
+    └────────┘      │    (table[slot, l // page_size], l % page_size)
+                    │    with logical index l = p % capacity
+                    └─ pages allocate from a free list as sequences grow
+                       and return to it on completion / preemption
+
+Capacity classes subsume the three dense cache kinds with one mechanism:
+
+* **full** layers (global GQA, MLA latents): capacity = ``max_len``;
+  a slot's table grows one page at a time as its sequence lengthens.
+* **ring / window** layers: capacity = ``window`` — the logical index
+  wraps, so a windowed layer cycles through a fixed
+  ``ceil(window / page_size)``-page working set no matter how long the
+  sequence runs.  Eviction *is* the page-addressing policy; there is no
+  special-cased rotation code left in the model.
+
+``PagedKVCache`` owns the device page arrays (built by
+``transformer.init_paged_cache`` with the same run/stack tree shape as the
+dense caches, so scan/donation work unchanged), the host free lists
+(:class:`PagePool`, one per class), and the block tables.  The engine asks
+it to ``grow`` a slot before every dispatch and ``release`` on completion
+or preemption; ``memory_stats`` reports resident (live-page) bytes versus
+physical pool bytes for the serving benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.model import transformer as tf
+from repro.model.attention import paged_cache_key
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class PagePool:
+    """Host-side free-list allocator over a fixed page count.
+
+    Allocation and reclaim are O(n) list operations; freed pages are
+    recycled LIFO so a steady-state workload keeps touching the same
+    (cache-warm) pages.  ``peak_in_use`` feeds the serving benchmark's
+    memory accounting.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 1:
+            raise ValueError(f"need at least one page, got {num_pages}")
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.peak_in_use = 0
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` pages, or None (and no change) if the pool can't."""
+        if n > len(self._free):
+            return None
+        got = [self._free.pop() for _ in range(n)]
+        self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+        return got
+
+    def free(self, pages: List[int]) -> None:
+        self._free.extend(pages)
+        if len(self._free) > self.num_pages:
+            raise RuntimeError("double free: pool over-full")
+
+
+@dataclasses.dataclass
+class _CacheClass:
+    """One capacity class: its pool, block table, and accounting."""
+    capacity: int                    # logical tokens before wrap
+    table_width: int                 # pages per slot
+    pool: PagePool
+    table: np.ndarray                # [slots, table_width] int32 page ids
+    owned: List[List[int]]           # per-slot pages, logical order
+    bytes_per_page: int              # across every layer of the class
+
+
+class PagedKVCache:
+    """Page-pool KV cache for the serving engine (``cache_layout="paged"``).
+
+    One instance replaces the dense ``init_cache`` allocation: ``caches``
+    is the device tree the jit'd prefill/decode programs thread through
+    (page arrays for attention, per-slot dense rows for SSM state), and
+    ``tables()`` materializes the block tables for a dispatch.
+
+    ``num_pages`` sizes the *full* class pool (the unbounded one); windowed
+    classes are bounded by construction and default to their maximum
+    working set.  The default full pool equals the dense layout's capacity
+    (``slots × max_len / page_size`` pages) — shrink it to serve mixed
+    traffic in less memory, at the cost of admission back-pressure and
+    (worst case) preemption.
+    """
+
+    def __init__(self, cfg: ModelConfig, slots: int, max_len: int, dtype,
+                 *, page_size: int = 16,
+                 num_pages: Optional[int] = None):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if max_len % page_size:
+            raise ValueError(
+                f"max_len={max_len} must be a multiple of "
+                f"page_size={page_size}")
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.page_size = page_size
+
+        # capacity classes present in this architecture
+        caps: Dict[str, int] = {}
+        per_layer_page_elems: Dict[str, int] = {}
+        for spec in cfg.layer_specs():
+            if spec.attn == "gqa":
+                key = paged_cache_key(spec)
+                caps[key] = spec.window if spec.window is not None \
+                    else max_len
+                per_layer_page_elems[key] = per_layer_page_elems.get(key, 0) \
+                    + 2 * page_size * cfg.n_kv_heads * cfg.dh
+            elif spec.attn == "mla":
+                caps["full"] = max_len
+                per_layer_page_elems["full"] = \
+                    per_layer_page_elems.get("full", 0) + page_size * (
+                        cfg.mla.kv_lora_rank + cfg.mla.rope_dim)
+
+        itemsize = jnp.dtype(dtype).itemsize
+        self.classes: Dict[str, _CacheClass] = {}
+        pool_sizes: Dict[str, int] = {}
+        for key, cap in caps.items():
+            width = _ceil_div(cap, page_size)
+            if key == "full" and num_pages is not None:
+                n = num_pages
+            else:
+                n = slots * width            # dense-equivalent capacity
+            pool_sizes[key] = n
+            self.classes[key] = _CacheClass(
+                capacity=cap,
+                table_width=width,
+                pool=PagePool(n),
+                table=np.zeros((slots, width), np.int32),
+                owned=[[] for _ in range(slots)],
+                bytes_per_page=per_layer_page_elems[key] * itemsize,
+            )
+
+        self.caches = tf.init_paged_cache(cfg, slots, pool_sizes, page_size,
+                                          dtype)
+        self._physical_page_bytes = sum(
+            c.pool.num_pages * c.bytes_per_page
+            for c in self.classes.values())
+        self._state_bytes = sum(
+            x.nbytes for x in jax.tree.leaves(self.caches)
+        ) - self._physical_page_bytes
+
+    # -- allocation ---------------------------------------------------------
+
+    def pages_needed(self, key: str, kv_target: int) -> int:
+        c = self.classes[key]
+        return _ceil_div(min(kv_target, c.capacity), self.page_size)
+
+    def validate_request(self, total_tokens: int) -> None:
+        """Reject a request no pool could ever hold alone — the engine's
+        progress guarantee (preempt-youngest) needs any single request to
+        fit an otherwise-empty pool."""
+        for key, c in self.classes.items():
+            need = self.pages_needed(key, min(total_tokens, self.max_len))
+            if need > c.pool.num_pages:
+                raise ValueError(
+                    f"request needs {need} '{key}' pages but the pool has "
+                    f"only {c.pool.num_pages}; raise num_pages or shorten "
+                    f"the request")
+
+    def can_grow(self, slot: int, kv_target: int) -> bool:
+        return all(
+            self.pages_needed(k, kv_target) - len(c.owned[slot])
+            <= c.pool.free_pages
+            for k, c in self.classes.items())
+
+    def grow(self, slot: int, kv_target: int) -> bool:
+        """Extend ``slot``'s tables to cover ``kv_target`` tokens in every
+        class.  All-or-nothing: returns False (state unchanged) when any
+        pool is short."""
+        if not self.can_grow(slot, kv_target):
+            return False
+        for key, c in self.classes.items():
+            need = self.pages_needed(key, kv_target)
+            have = len(c.owned[slot])
+            if need > have:
+                got = c.pool.alloc(need - have)
+                c.table[slot, have:need] = got
+                c.owned[slot].extend(got)
+        return True
+
+    def release(self, slot: int) -> None:
+        """Return every page the slot owns (completion / preemption) and
+        reset its table rows to the sentinel page 0 — reads through stale
+        rows are masked by kv_len, writes by the engine's validity masks."""
+        for c in self.classes.values():
+            if c.owned[slot]:
+                c.pool.free(c.owned[slot])
+                c.owned[slot] = []
+            c.table[slot] = 0
+
+    def tables(self) -> Dict[str, jnp.ndarray]:
+        """Device block tables for one dispatch (tiny int32 uploads)."""
+        return {k: jnp.asarray(c.table) for k, c in self.classes.items()}
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def pages_in_use(self) -> Dict[str, int]:
+        return {k: c.pool.pages_in_use for k, c in self.classes.items()}
+
+    def memory_stats(self) -> dict:
+        """Resident = pages holding live tokens; physical = the whole pool
+        allocation (device arrays are static).  SSM slot state is counted
+        separately — it is O(slots), independent of sequence length."""
+        resident = sum(c.pool.pages_in_use * c.bytes_per_page
+                       for c in self.classes.values())
+        peak = sum(c.pool.peak_in_use * c.bytes_per_page
+                   for c in self.classes.values())
+        return {
+            "page_size": self.page_size,
+            "num_pages": {k: c.pool.num_pages
+                          for k, c in self.classes.items()},
+            "pages_in_use": self.pages_in_use,
+            "peak_pages_in_use": {k: c.pool.peak_in_use
+                                  for k, c in self.classes.items()},
+            "resident_cache_bytes": resident,
+            "peak_resident_cache_bytes": peak,
+            "physical_cache_bytes": self._physical_page_bytes,
+            "ssm_state_bytes": self._state_bytes,
+        }

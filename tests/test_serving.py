@@ -114,6 +114,57 @@ def test_engine_temperature_sampling_runs():
     assert all(0 <= t < cfg.vocab for r in reqs for t in r.generated)
 
 
+def test_prefill_jit_keys_are_length_bucketed():
+    """PR-2 follow-up: prompts are padded to power-of-two buckets (masked
+    SSM stepping + masked ring/page writes), so a fresh prompt length
+    inside an already-seen bucket must NOT trigger a fresh prefill
+    compile — the jit key is (group width, bucket)."""
+    cfg = get_config("stablelm-1.6b-smoke")
+    params, _ = tf.init(cfg, jax.random.PRNGKey(0), RT)
+    engine = ServeEngine(cfg, params, slots=2, max_len=64, rt=RT)
+    rng = np.random.default_rng(4)
+
+    def serve_len(plen):
+        req = Request(rid=plen,
+                      prompt=rng.integers(0, cfg.vocab, plen).astype(
+                          np.int32),
+                      max_new_tokens=2)
+        engine.submit(req)
+        engine.run()
+        assert req.done
+        return req
+
+    serve_len(5)
+    keys_after_first = set(engine._prefill_fns)
+    serve_len(7)                       # same bucket (8) → no new key
+    assert set(engine._prefill_fns) == keys_after_first == {(1, 8)}
+    serve_len(9)                       # next bucket (16) → one new key
+    assert set(engine._prefill_fns) == {(1, 8), (1, 16)}
+
+    # bucketing must not perturb the greedy stream: same prompt through a
+    # bucketed engine and via the manual per-token reference path
+    prompt = np.asarray([5, 9, 2, 11, 3], np.int32)
+    caches = tf.init_cache(cfg, 1, 64, jnp.float32)
+    kv, logits = 0, None
+    for t in prompt:
+        kv += 1
+        logits, caches = tf.decode_step(
+            cfg, params, jnp.asarray([[t]]), caches,
+            jnp.asarray([kv], jnp.int32), RT)
+    toks = []
+    for _ in range(4):
+        nxt = int(jnp.argmax(logits[0]))
+        toks.append(nxt)
+        kv += 1
+        logits, caches = tf.decode_step(
+            cfg, params, jnp.asarray([[nxt]]), caches,
+            jnp.asarray([kv], jnp.int32), RT)
+    req = Request(rid=99, prompt=prompt, max_new_tokens=4)
+    engine.submit(req)
+    engine.run()
+    assert req.generated == toks
+
+
 def test_chunked_prefill_matches_whole_prompt():
     """kv_offset continuation (full + ring/window caches): an engine that
     prefills in chunks emits the same greedy tokens as whole-prompt."""
