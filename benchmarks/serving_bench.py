@@ -10,7 +10,11 @@ for a programmatic run:
 ``--smoke`` serves a mixed-length trace (prompts 8–64 tokens) through
 BOTH cache layouts (dense and paged), cross-checking greedy-output
 equality and recording resident cache bytes / bytes per live token /
-peak pages in use for each.
+peak pages in use for each.  Extra flags pass through to the launcher —
+e.g. ``--smoke --shared-prefix-len 64`` turns the trace into
+shared-system-prompt traffic and reports the paged engine's prefix-cache
+hit rate and prefill-dispatch savings (plus a third greedy cross-check
+against the prefix-cache-disabled paged engine).
 """
 from __future__ import annotations
 

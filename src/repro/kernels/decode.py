@@ -328,8 +328,11 @@ def fusemax_decode_paged_pallas(
 
     def _kv_index(bh_i, s, m2_i, kv_len_ref, bt_ref):
         page_slot = s * split_pages + m2_i // blocks_per_page
-        return (bt_ref[bh_i // hkv, page_slot], m2_i % blocks_per_page,
-                bh_i % hkv, 0)
+        # unbacked table rows hold the out-of-range sentinel id (P):
+        # clamp the DMA to the last page — those tiles are masked by
+        # kv_len in the kernel body, so the content never contributes
+        page = jnp.minimum(bt_ref[bh_i // hkv, page_slot], n_pages - 1)
+        return (page, m2_i % blocks_per_page, bh_i % hkv, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,

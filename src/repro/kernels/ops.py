@@ -393,14 +393,17 @@ def gather_pages(pages: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
     """Materialize a block-table view of a page pool.
 
     pages: [P, page_size, *tail]; block_table: [B, W] int32 →
-    [B, W·page_size, *tail].  Unallocated table entries (sentinel 0) gather
-    page 0's content — callers mask by the logical length, so the garbage
-    never contributes.  This is the jnp/ref read path; the Pallas kernel
-    resolves pages inside its ``index_map`` instead and never materializes
-    this view.
+    [B, W·page_size, *tail].  Unallocated table entries hold the
+    out-of-range sentinel id (``P``) — the gather clamps them to the last
+    page and callers mask by the logical length, so the garbage never
+    contributes (while the matching *scatter* drops sentinel writes
+    outright).  This is the jnp/ref read path; the Pallas kernel resolves
+    pages inside its ``index_map`` instead and never materializes this
+    view.
     """
     b = block_table.shape[0]
-    g = pages[block_table]                      # [B, W, page_size, *tail]
+    bt = jnp.minimum(block_table, pages.shape[0] - 1)
+    g = pages[bt]                               # [B, W, page_size, *tail]
     return g.reshape(b, -1, *pages.shape[2:])
 
 

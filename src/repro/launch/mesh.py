@@ -4,23 +4,44 @@ Defined as FUNCTIONS (never module-level constants) so importing this
 module never touches jax device state.  The dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import to build these meshes on CPU.
+
+Version compat: ``jax.sharding.AxisType`` only exists on jax >= 0.6 —
+on older jax (0.4.x / 0.5.x) every mesh axis is implicitly "auto", so the
+plain ``jax.make_mesh(shape, axes)`` (or, where even that is missing, a
+``Mesh`` over ``mesh_utils.create_device_mesh``) is semantically
+identical.  ``_axis_type_kwargs`` centralizes the guard.
 """
 from __future__ import annotations
 
 import jax
 
 
+def _axis_type_kwargs(n_axes: int) -> dict:
+    """``axis_types=(Auto,) * n`` on jax >= 0.6, nothing on older jax
+    (where meshes are auto-typed and the kwarg does not exist)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def _build_mesh(shape, axes):
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             **_axis_type_kwargs(len(axes)))
+    from jax.experimental import mesh_utils
+
+    devices = mesh_utils.create_device_mesh(tuple(shape))
+    return jax.sharding.Mesh(devices, tuple(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single pod (256 chips) or 2×16×16 two-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _build_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests / elastic re-mesh."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _build_mesh(shape, axes)

@@ -306,11 +306,15 @@ def gqa_prefill_paged(
     p, x: jnp.ndarray, cache: dict, bt_rows: jnp.ndarray, off: int,
     cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
     true_len: jnp.ndarray,
+    cached_len: Optional[jnp.ndarray] = None,
 ) -> tuple[jnp.ndarray, dict]:
     """Prefill a prompt chunk straight into the page pool (no dense
     mini-cache): queries [off, off+S) attend history gathered through the
     block-table rows plus the chunk itself; the chunk's K/V scatter into
-    pages, masked by ``true_len``.  Outputs are bit-identical to the dense
+    pages, masked by ``true_len``.  ``cached_len`` ([B] int32) marks each
+    row's shared-prefix extent: positions below it live in pages mapped
+    from the prefix index and must be read but never rewritten, so their
+    writes are dropped too.  Outputs are bit-identical to the dense
     prefill path — the attention inputs are the same arrays, only the
     K/V residency differs."""
     b, s_len, _ = x.shape
@@ -319,6 +323,8 @@ def gqa_prefill_paged(
     tl = true_len[:, None]
     pos = positions[:1]                                  # [1, S]
     valid = (pos < tl) & (pos >= jnp.minimum(tl, off + s_len) - cap)
+    if cached_len is not None:
+        valid = valid & (positions >= cached_len[:, None])
 
     if off == 0:
         y = gqa_forward(p, x, cfg, spec, rt)
@@ -612,11 +618,13 @@ def mla_prefill_paged(
     p, x: jnp.ndarray, cache: dict, bt_rows: jnp.ndarray, off: int,
     cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
     true_len: jnp.ndarray,
+    cached_len: Optional[jnp.ndarray] = None,
 ) -> tuple[jnp.ndarray, dict]:
     """Prefill a prompt chunk's latents straight into the page pool; the
     chunk's queries attend the full cached prefix gathered through the
     block-table rows (expanded per-head, mirroring
-    :func:`mla_prefill_chunk`)."""
+    :func:`mla_prefill_chunk`).  ``cached_len`` masks writes below each
+    row's shared-prefix extent (see :func:`gqa_prefill_paged`)."""
     m = cfg.mla
     b, s_len, _ = x.shape
     dt = x.dtype
@@ -625,6 +633,8 @@ def mla_prefill_paged(
                                                          positions)
     cap = bt_rows.shape[1] * cache["ckv_pages"].shape[1]
     valid = positions[:1] < true_len[:, None]
+    if cached_len is not None:
+        valid = valid & (positions >= cached_len[:, None])
     ckv_pages = write_pages(cache["ckv_pages"], bt_rows, positions,
                             ckv_new, cap, valid)
     krope_pages = write_pages(cache["krope_pages"], bt_rows, positions,

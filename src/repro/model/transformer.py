@@ -398,6 +398,35 @@ def init_paged_cache(cfg: ModelConfig, slots: int, num_pages: dict,
     return caches
 
 
+def copy_cache_pages(cfg: ModelConfig, caches, key: str, src: int,
+                     dst: int):
+    """Device-side page copy ``pages[dst] = pages[src]`` for every
+    attention layer in capacity class ``key`` (COW for shared-prefix
+    pages — see :mod:`repro.serving.kv_cache`).  ``caches`` must come from
+    :func:`init_paged_cache`; stacked runs carry a leading repeats axis,
+    so the page axis is located per run.  Returns the rebuilt tree."""
+    from repro.model.attention import paged_cache_key
+
+    out = []
+    for (pattern, reps), cache_run in zip(cfg.runs(), caches):
+        pos = []
+        for spec, c1 in zip(pattern, cache_run):
+            matches = (spec.attn == "gqa"
+                       and paged_cache_key(spec) == key) or \
+                      (spec.attn == "mla" and key == "full")
+            if matches and "attn" in c1:
+                c1 = dict(c1)
+                if reps > 1:
+                    c1["attn"] = {k: a.at[:, dst].set(a[:, src])
+                                  for k, a in c1["attn"].items()}
+                else:
+                    c1["attn"] = {k: a.at[dst].set(a[src])
+                                  for k, a in c1["attn"].items()}
+            pos.append(c1)
+        out.append(pos)
+    return out
+
+
 def cache_axes(cfg: ModelConfig):
     """Structural logical-axes tree mirroring ``init_cache`` output."""
     def layer_axes(spec: LayerSpec) -> dict:
@@ -495,7 +524,8 @@ def prefill(cfg: ModelConfig, params, batch: dict, caches,
             rt: Runtime = Runtime(), kv_offset: int = 0,
             true_len: Optional[jnp.ndarray] = None,
             block_tables: Optional[dict] = None,
-            slot_ids: Optional[jnp.ndarray] = None):
+            slot_ids: Optional[jnp.ndarray] = None,
+            cached_len: Optional[jnp.ndarray] = None):
     """Process a prompt (or prompt chunk), filling caches.  Returns
     (logits_last, caches).
 
@@ -521,6 +551,13 @@ def prefill(cfg: ModelConfig, params, batch: dict, caches,
     in the slot rows ``slot_ids`` of the full [slots, ...] state arrays
     (reset at kv_offset == 0 — admission semantics).  No dense mini-cache
     is materialized.
+
+    ``cached_len`` ([B] int32, paged layout only): each row's
+    shared-prefix length — positions below it are served by pages mapped
+    from the prefix index, which this prefill must *read but never
+    rewrite*.  Page writes below a row's ``cached_len`` are masked
+    (dropped), independently of the static ``kv_offset`` the dispatch was
+    grouped under.
     """
     x = _embed_inputs(cfg, params, batch, rt)
     s_len = x.shape[1]
@@ -534,7 +571,8 @@ def prefill(cfg: ModelConfig, params, batch: dict, caches,
             for spec_j, p_j, c_j in zip(pattern, p_run, cache):
                 x, c_new = _prefill_layer(p_j, x, c_j, cfg, spec_j, rt,
                                           s_len, kv_offset, true_len,
-                                          block_tables, slot_ids)
+                                          block_tables, slot_ids,
+                                          cached_len)
                 cs.append(c_new)
             new_caches.append(cs)
             continue
@@ -548,7 +586,8 @@ def prefill(cfg: ModelConfig, params, batch: dict, caches,
                     c_i = jax.tree.map(lambda a: a[i], c_j)
                     x, c_new = _prefill_layer(p_i, x, c_i, cfg, spec_j, rt,
                                               s_len, kv_offset, true_len,
-                                              block_tables, slot_ids)
+                                              block_tables, slot_ids,
+                                              cached_len)
                     outs[j].append(c_new)
             new_caches.append([
                 jax.tree.map(lambda *xs: jnp.stack(xs), *o) for o in outs])
@@ -560,7 +599,8 @@ def prefill(cfg: ModelConfig, params, batch: dict, caches,
             for spec_j, p_j, c_j in zip(pattern, ps, cs_in):
                 h, c_new = _prefill_layer(p_j, h, c_j, cfg, spec_j, rt,
                                           s_len, kv_offset, true_len,
-                                          block_tables, slot_ids)
+                                          block_tables, slot_ids,
+                                          cached_len)
                 cs_out.append(c_new)
             return h, tuple(cs_out)
 
@@ -580,7 +620,8 @@ def prefill(cfg: ModelConfig, params, batch: dict, caches,
 
 
 def _prefill_layer(p, x, cache, cfg, spec, rt, s_len, kv_offset=0,
-                   true_len=None, block_tables=None, slot_ids=None):
+                   true_len=None, block_tables=None, slot_ids=None,
+                   cached_len=None):
     """Layer forward that also populates the serving cache.  With
     ``kv_offset > 0`` (chunked-prefill continuation) attention layers
     attend the cached history via the ``*_prefill_chunk`` paths; SSM
@@ -596,7 +637,7 @@ def _prefill_layer(p, x, cache, cfg, spec, rt, s_len, kv_offset=0,
             bt_rows = block_tables[attn_mod.paged_cache_key(spec)][slot_ids]
             y, new_cache["attn"] = attn_mod.gqa_prefill_paged(
                 p["attn"], h, cache["attn"], bt_rows, kv_offset, cfg, spec,
-                rt, true_len)
+                rt, true_len, cached_len)
         elif kv_offset:
             y, new_cache["attn"] = attn_mod.gqa_prefill_chunk(
                 p["attn"], h, cache["attn"], kv_offset, cfg, spec, rt,
@@ -630,7 +671,7 @@ def _prefill_layer(p, x, cache, cfg, spec, rt, s_len, kv_offset=0,
         if paged:
             y, new_cache["attn"] = attn_mod.mla_prefill_paged(
                 p["attn"], h, cache["attn"], block_tables["full"][slot_ids],
-                kv_offset, cfg, spec, rt, true_len)
+                kv_offset, cfg, spec, rt, true_len, cached_len)
         elif kv_offset:
             y, new_cache["attn"] = attn_mod.mla_prefill_chunk(
                 p["attn"], h, cache["attn"], kv_offset, cfg, spec, rt)

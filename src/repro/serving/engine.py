@@ -19,7 +19,14 @@ greedy decoding:
     as they decode; on pool exhaustion the youngest slot is preempted back
     to the queue (recompute-style: its prompt + generated tokens re-prefill
     on re-admission, which reproduces the greedy stream exactly), and
-    completed requests return their pages to the free list.
+    completed requests return their pages to the free list.  With
+    ``prefix_caching`` (default, auto-disabled for windowed/SSM/MoE
+    configs) a
+    completed request's full pages are instead demoted into a token-hash
+    prefix index: later prompts sharing the prefix map those pages into
+    their block tables at admission and prefill only the uncached tail —
+    ``stats`` reports ``prefix_hits`` / ``tokens_reused`` / ``cow_copies``
+    and greedy outputs stay identical with the feature on or off.
 
 The hot path is device-resident end-to-end:
 
@@ -28,11 +35,13 @@ The hot path is device-resident end-to-end:
     slots with ONE jit'd call per bucket (dense: fresh mini-cache +
     ``tf.scatter_cache_slots``; paged: straight into the page pool through
     the block tables — no mini-cache materialized).  Jit keys are
-    (group width, bucket), so a fresh prompt length no longer triggers a
-    fresh compile: padded tails are masked (ring writes, page writes, SSM
-    stepping) via ``true_len`` and each row's logits are gathered at its
-    real last token.  Long prompts are processed in ``prefill_chunk``-sized
-    pieces *inside* the same jit'd call (``kv_offset`` continuation).
+    (group width, bucket, shared-prefix offset), so a fresh prompt length
+    no longer triggers a fresh compile: padded tails are masked (ring
+    writes, page writes, SSM stepping) via ``true_len`` and each row's
+    logits are gathered at its real last token.  Long prompts are
+    processed in ``prefill_chunk``-sized pieces *inside* the same jit'd
+    call (``kv_offset`` continuation); prefix-cache hits prefill only the
+    tail beyond their static ``cached_len`` offset.
   * **Fused multi-step decode** — one jit'd ``lax.while_loop`` (with
     on-device early exit once every slot's budget is spent) samples,
     appends to the cache, and advances ``kv_len`` for up to
@@ -168,7 +177,8 @@ class ServeEngine:
                  prefill_chunk: Optional[int] = None,
                  cache_layout: str = "dense",
                  page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 prefix_caching: bool = True):
         if cache_layout not in ("dense", "paged"):
             raise ValueError(f"unknown cache_layout: {cache_layout!r}")
         self.cfg = cfg
@@ -185,7 +195,8 @@ class ServeEngine:
         if cache_layout == "paged":
             self.kv = PagedKVCache(cfg, slots, max_len, dtype,
                                    page_size=page_size,
-                                   num_pages=num_pages)
+                                   num_pages=num_pages,
+                                   prefix_caching=prefix_caching)
             self.caches = self.kv.caches
         else:
             self.kv = None
@@ -205,7 +216,9 @@ class ServeEngine:
         self._order = [0] * slots          # admission sequence per slot
         self.stats = {"prefill_dispatches": 0, "decode_dispatches": 0,
                       "decode_steps": 0, "tokens_decoded": 0,
-                      "preemptions": 0, "peak_live_tokens": 0}
+                      "preemptions": 0, "peak_live_tokens": 0,
+                      "prefix_hits": 0, "tokens_reused": 0,
+                      "cow_copies": 0, "tokens_prefilled": 0}
 
     # -- jit caches ---------------------------------------------------------
 
@@ -229,11 +242,16 @@ class ServeEngine:
             off += c
         return pieces
 
-    def _get_prefill(self, n: int, s: int) -> Callable:
-        """Jit'd: prefill ``n`` prompts padded to bucket length ``s`` into
-        slot rows (dense) or pages (paged); per-row real lengths arrive as
-        the ``true_len`` device argument, so the jit key is (n, s) only."""
-        fn = self._prefill_fns.get((n, s))
+    def _get_prefill(self, n: int, s: int, off0: int = 0) -> Callable:
+        """Jit'd: prefill ``n`` prompt *tails* padded to bucket length
+        ``s`` into slot rows (dense) or pages (paged); per-row real
+        lengths arrive as the ``true_len`` device argument, so the jit key
+        is (n, s, off0) only.  ``off0`` (paged layout) is the static
+        shared-prefix offset the group was admitted under: positions
+        [0, off0) are already resident in mapped prefix pages, and the
+        per-row ``cached_len`` device argument masks their page writes so
+        shared head pages are read but never rewritten."""
+        fn = self._prefill_fns.get((n, s, off0))
         if fn is not None:
             return fn
         cfg, rt = self.cfg, self.rt
@@ -247,19 +265,22 @@ class ServeEngine:
 
         if paged:
             def prefill_into_slots(params, tokens, caches, tables,
-                                   slot_ids, true_len, last_logits):
+                                   slot_ids, true_len, cached_len,
+                                   last_logits):
                 logits = jnp.zeros((n, cfg.vocab), jnp.float32)
                 for off, c in pieces:
                     lg, caches = tf.prefill(
                         cfg, params, {"inputs": tokens[:, off:off + c]},
-                        caches, rt, kv_offset=off, true_len=true_len,
-                        block_tables=tables, slot_ids=slot_ids)
-                    logits = select_last(logits, lg, true_len, off, c)
+                        caches, rt, kv_offset=off0 + off,
+                        true_len=true_len, block_tables=tables,
+                        slot_ids=slot_ids, cached_len=cached_len)
+                    logits = select_last(logits, lg, true_len, off0 + off,
+                                         c)
                 last_logits = last_logits.at[slot_ids].set(logits)
                 return last_logits, caches
 
             fn = jax.jit(prefill_into_slots,
-                         donate_argnums=self._donate((2, 6)))
+                         donate_argnums=self._donate((2, 7)))
         else:
             def prefill_into_slots(params, tokens, caches, slot_ids,
                                    true_len, last_logits):
@@ -276,7 +297,7 @@ class ServeEngine:
 
             fn = jax.jit(prefill_into_slots,
                          donate_argnums=self._donate((2, 5)))
-        self._prefill_fns[(n, s)] = fn
+        self._prefill_fns[(n, s, off0)] = fn
         return fn
 
     def _get_loop(self, n_steps: int) -> Callable:
@@ -313,29 +334,54 @@ class ServeEngine:
         plus the decode loops (1 and ``decode_chunk``).
         """
         t0 = time.perf_counter()
-        lens = (prompt_len,) if isinstance(prompt_len, int) else prompt_len
-        buckets = sorted({self._bucket(max(1, min(p, self.max_len - 1)))
-                          for p in lens})
-        counts = {self.slots} | {1 << i
-                                 for i in range((self.slots - 1).bit_length())}
-        for b in buckets:
-            plen = min(b, self.max_len - 1)
-            for count in sorted(counts, reverse=True):
-                dummies = [Request(rid=-1 - i,
-                                   prompt=np.zeros((plen,), np.int32),
-                                   max_new_tokens=self.decode_chunk)
-                           for i in range(count)]
-                for r in dummies:
-                    self.submit(r)
-                self.run()
-        # slots auto-freed on completion; dummy cache rows/pages are fully
-        # overwritten by the next admission.  Reset counters.
-        for k in self.stats:
-            self.stats[k] = 0
+        prefix_was = False
         if self.kv is not None:
-            for c in self.kv.classes.values():
-                c.pool.peak_in_use = 0
+            # warmup must compile the *cold* prefill keys: with the index
+            # live, the identical dummy prompts would hit each other and
+            # compile tail-offset keys instead.  (Tail-offset keys depend
+            # on real traffic's prefix lengths, so they compile on first
+            # hit — once per (width, tail bucket, offset).)
+            prefix_was = self.kv.prefix_enabled
+            self.kv.prefix_enabled = False
+        try:
+            lens = (prompt_len,) if isinstance(prompt_len, int) \
+                else prompt_len
+            buckets = sorted({self._bucket(max(1, min(p, self.max_len - 1)))
+                              for p in lens})
+            counts = {self.slots} | {
+                1 << i for i in range((self.slots - 1).bit_length())}
+            for b in buckets:
+                plen = min(b, self.max_len - 1)
+                for count in sorted(counts, reverse=True):
+                    dummies = [Request(rid=-1 - i,
+                                       prompt=np.zeros((plen,), np.int32),
+                                       max_new_tokens=self.decode_chunk)
+                               for i in range(count)]
+                    for r in dummies:
+                        self.submit(r)
+                    self.run()
+            # slots auto-freed on completion; dummy cache rows/pages are
+            # fully overwritten by the next admission.  Reset counters and
+            # drop the prefix entries the dummy prompts registered —
+            # warmup traffic must not hit (or occupy pages for) the real
+            # trace.
+            for k in self.stats:
+                self.stats[k] = 0
+            if self.kv is not None:
+                self.kv.clear_prefix()
+                self.kv.reset_peaks()
+        finally:
+            if self.kv is not None:
+                self.kv.prefix_enabled = prefix_was
         return time.perf_counter() - t0
+
+    def clear_prefix_cache(self) -> int:
+        """Drop every reusable-prefix entry so the pool can drain fully
+        (e.g. between unrelated traffic phases).  Returns entries
+        dropped."""
+        if self.kv is None:
+            return 0
+        return self.kv.clear_prefix()
 
     def submit(self, req: Request) -> None:
         if len(req.prompt) >= self.max_len:
@@ -362,29 +408,50 @@ class ServeEngine:
         """Fill free slots from the queue.  Dense layout: admission = a
         free slot.  Paged layout: admission = free slot AND the prompt's
         pages (+1 decode token) fit every pool — continuous batching
-        backed by actual memory, not worst-case rows.  One batched prefill
-        dispatch per length bucket."""
-        admitted: list[tuple[int, Request, np.ndarray]] = []
+        backed by actual memory, not worst-case rows.  Prompts are first
+        matched against the reusable-prefix index (``kv.admit``): hit
+        pages map straight into the slot's block table and only the
+        uncached tail is prefilled.  One batched prefill dispatch per
+        (shared-prefix length, tail length bucket) group, dispatched
+        cold-first so a group that writes fresh prefix pages always runs
+        before a group that reads them."""
+        admitted: list[tuple[int, Request, np.ndarray, int, list]] = []
         for i in range(self.slots):
             if self.active[i] is not None or not self.queue:
                 continue
             req = self.queue[0]
             tokens = self._resume_tokens(req)
-            if self.kv is not None and \
-                    not self.kv.grow(i, len(tokens) + 1):
-                break                    # head-of-line waits for pages
+            cached, cow_pairs = 0, []
+            if self.kv is not None:
+                info = self.kv.admit(i, tokens, len(tokens) + 1)
+                if info is None:
+                    break                # head-of-line waits for pages
+                cached = info["cached_len"]
+                cow_pairs = info["cow_pairs"]
+                if info["reused"]:
+                    self.stats["prefix_hits"] += 1
+                    self.stats["tokens_reused"] += info["reused"]
+                self.stats["cow_copies"] += len(cow_pairs)
             self.queue.pop(0)
             self.active[i] = req
             self._admit_seq += 1
             self._order[i] = self._admit_seq
-            admitted.append((i, req, tokens))
+            admitted.append((i, req, tokens, cached, cow_pairs))
         if not admitted:
             return
-        by_bucket: dict[int, list] = {}
-        for slot, req, tokens in admitted:
-            by_bucket.setdefault(self._bucket(len(tokens)), []).append(
-                (slot, req, tokens))
-        for sb, group in sorted(by_bucket.items()):
+        by_group: dict[tuple[int, int], list] = {}
+        for slot, req, tokens, cached, cow_pairs in admitted:
+            key = (cached, self._bucket(len(tokens) - cached))
+            by_group.setdefault(key, []).append(
+                (slot, req, tokens, cached, cow_pairs))
+        for (off0, sb), group in sorted(by_group.items()):
+            # groups dispatch in ascending shared-prefix order: a group
+            # that writes fresh prefix pages always runs before one that
+            # reads them, and deferred COW copies land here — after their
+            # source page's writer, before this group's own prefill
+            pairs = [p for g in group for p in g[4]]
+            if pairs:
+                self.caches = self.kv.apply_cow(self.caches, pairs)
             # pad the group to the next power of two (duplicate rows
             # scatter the same data twice — deterministic): bounded jit
             # keys per bucket without paying full-slot-width prefill FLOPs
@@ -393,23 +460,26 @@ class ServeEngine:
             padded = group + [group[-1]] * (width - len(group))
             slot_ids = np.array([g[0] for g in padded], np.int32)
             true_len = np.array([len(g[2]) for g in padded], np.int32)
+            cached_len = np.array([g[3] for g in padded], np.int32)
             toks = np.zeros((len(padded), sb), np.int32)
-            for r, (_, _, t) in enumerate(padded):
-                toks[r, :len(t)] = t
-            fn = self._get_prefill(len(padded), sb)
+            for r, (_, _, t, co, _cp) in enumerate(padded):
+                toks[r, :len(t) - co] = t[co:]
+            fn = self._get_prefill(len(padded), sb, off0)
             if self.kv is not None:
                 self._last_logits, self.caches = fn(
                     self.params, jnp.asarray(toks), self.caches,
                     self.kv.tables(), jnp.asarray(slot_ids),
-                    jnp.asarray(true_len), self._last_logits)
+                    jnp.asarray(true_len), jnp.asarray(cached_len),
+                    self._last_logits)
             else:
                 self._last_logits, self.caches = fn(
                     self.params, jnp.asarray(toks), self.caches,
                     jnp.asarray(slot_ids), jnp.asarray(true_len),
                     self._last_logits)
             self.stats["prefill_dispatches"] += 1
-            for slot, req, tokens in group:
+            for slot, req, tokens, co, _cp in group:
                 s = len(tokens)
+                self.stats["tokens_prefilled"] += s - co
                 self.kv_len[slot] = s
                 budget = req.max_new_tokens - len(req.generated)
                 # ≥1 token always (the seed engine's semantics), bounded by
@@ -505,7 +575,10 @@ class ServeEngine:
                 self.active[i] = None
                 self.kv_len[i] = 0
                 if self.kv is not None:
-                    self.kv.release(i)
+                    # completion path: hand the slot's full token stream to
+                    # release so its full pages are demoted into the
+                    # reusable-prefix index instead of freed
+                    self.kv.release(i, tokens=self._resume_tokens(req))
 
     def step(self) -> None:
         """Admit waiting requests, then run one fused decode dispatch."""
@@ -532,6 +605,10 @@ class ServeEngine:
             m["layout"] = "paged"
             m["bytes_per_live_token"] = round(
                 m["peak_resident_cache_bytes"] / peak_live, 1)
+            m["prefix_cache"].update(
+                hits=self.stats["prefix_hits"],
+                tokens_reused=self.stats["tokens_reused"],
+                cow_copies=self.stats["cow_copies"])
             return m
         # mirror the paged accounting: attention caches vs O(slots) SSM
         # state, so the layout A/B compares like with like

@@ -8,8 +8,8 @@ paper's M-independent on-chip buffering:
     layer storage (device, one per layer)     block table (host-mirrored,
     [num_pages, page_size, Hkv, dh]           one per capacity class,
                                               shared by all its layers)
-    ┌────────┐                                 slot 0: [ 3, 7, 1, -]
-    │ page 0 │◄───────┐                        slot 1: [ 0, 4, -, -]
+    ┌────────┐                                 slot 0: [ 3, 7, 1, ·]
+    │ page 0 │◄───────┐                        slot 1: [ 0, 4, ·, ·]
     │ page 1 │◄─────┐ │                        slot 2: [ 6, 2, 5, 8]
     │ page 2 │      │ │
     │  ...   │      │ └─ token at position p lives at
@@ -28,18 +28,38 @@ Capacity classes subsume the three dense cache kinds with one mechanism:
   sequence runs.  Eviction *is* the page-addressing policy; there is no
   special-cased rotation code left in the model.
 
+Automatic prefix caching (``prefix_caching=True``, the paper's
+redundant-pass argument applied at request scope): pages are *refcounted*
+and a token-hash index (chained per-page hashes, full pages only) maps
+prompt prefixes to resident pages.  ``admit`` matches an incoming prompt
+against the index and maps the hit pages straight into the slot's block
+table — only the uncached tail is prefilled; ``release`` demotes a
+completed slot's full pages into the index (an extra index-held reference)
+instead of freeing them, and the pool reclaims index-only pages LRU when
+it runs short.  A shared page is never written: the admission path
+copy-on-writes the one page a tail prefill could touch (the
+prompt-exactly-page-aligned case), and released rows are reset to an
+out-of-range *sentinel* page id so any write-mask slip is dropped by the
+scatter instead of corrupting a live sequence.  Prefix caching requires
+every cache class to be position-addressed from zero and every layer to
+be position-local, so it auto-disables for configs with windowed
+attention or SSM layers (their state at the prefix boundary is not
+reconstructible from retained pages) and for MoE configs (expert
+capacity depends on the prefilled chunk length).
+
 ``PagedKVCache`` owns the device page arrays (built by
 ``transformer.init_paged_cache`` with the same run/stack tree shape as the
 dense caches, so scan/donation work unchanged), the host free lists
 (:class:`PagePool`, one per class), and the block tables.  The engine asks
-it to ``grow`` a slot before every dispatch and ``release`` on completion
-or preemption; ``memory_stats`` reports resident (live-page) bytes versus
-physical pool bytes for the serving benchmark.
+it to ``admit`` a request / ``grow`` a slot before every dispatch and
+``release`` on completion or preemption; ``memory_stats`` reports resident
+(live-page) bytes versus reusable-prefix and physical pool bytes for the
+serving benchmark.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,12 +75,17 @@ def _ceil_div(a: int, b: int) -> int:
 
 
 class PagePool:
-    """Host-side free-list allocator over a fixed page count.
+    """Host-side refcounting free-list allocator over a fixed page count.
 
     Allocation and reclaim are O(n) list operations; freed pages are
     recycled LIFO so a steady-state workload keeps touching the same
-    (cache-warm) pages.  ``peak_in_use`` feeds the serving benchmark's
-    memory accounting.
+    (cache-warm) pages.  Every allocated page carries a reference count
+    (1 at ``alloc``); ``ref``/``unref`` let several owners — block-table
+    rows of different slots, the prefix index — share one physical page,
+    and the page returns to the free list only when the last reference
+    drops.  Freeing a page that is not allocated (double free) or still
+    shared raises instead of silently corrupting the free list.
+    ``peak_in_use`` feeds the serving benchmark's memory accounting.
     """
 
     def __init__(self, num_pages: int):
@@ -68,6 +93,7 @@ class PagePool:
             raise ValueError(f"need at least one page, got {num_pages}")
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._refcount: Dict[int, int] = {}
         self.peak_in_use = 0
 
     @property
@@ -79,17 +105,52 @@ class PagePool:
         return len(self._free)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop ``n`` pages, or None (and no change) if the pool can't."""
+        """Pop ``n`` pages (refcount 1), or None (and no change) if the
+        pool can't."""
         if n > len(self._free):
             return None
         got = [self._free.pop() for _ in range(n)]
+        for p in got:
+            self._refcount[p] = 1
         self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
         return got
 
     def free(self, pages: List[int]) -> None:
-        self._free.extend(pages)
-        if len(self._free) > self.num_pages:
-            raise RuntimeError("double free: pool over-full")
+        """Return pages to the free list.  Raises on a double free (page
+        not currently allocated) or on freeing a still-shared page —
+        either would alias one physical page to two owners later."""
+        for p in pages:
+            rc = self._refcount.get(p)
+            if rc is None:
+                raise RuntimeError(
+                    f"double free: page {p} is not allocated")
+            if rc > 1:
+                raise RuntimeError(
+                    f"freeing shared page {p} (refcount {rc}); "
+                    f"drop references with unref() instead")
+            del self._refcount[p]
+            self._free.append(p)
+
+    def ref(self, page: int) -> None:
+        """Add a reference to an allocated page."""
+        if page not in self._refcount:
+            raise RuntimeError(f"ref of unallocated page {page}")
+        self._refcount[page] += 1
+
+    def unref(self, page: int) -> bool:
+        """Drop one reference; the page is freed when the count reaches
+        zero.  Returns True if the page was freed."""
+        rc = self._refcount.get(page)
+        if rc is None:
+            raise RuntimeError(f"unref of unallocated page {page}")
+        if rc <= 1:
+            self.free([page])
+            return True
+        self._refcount[page] = rc - 1
+        return False
+
+    def refcount(self, page: int) -> int:
+        return self._refcount.get(page, 0)
 
 
 @dataclasses.dataclass
@@ -101,6 +162,19 @@ class _CacheClass:
     table: np.ndarray                # [slots, table_width] int32 page ids
     owned: List[List[int]]           # per-slot pages, logical order
     bytes_per_page: int              # across every layer of the class
+    peak_live_pages: int = 0         # distinct pages referenced by slots
+
+
+@dataclasses.dataclass
+class _PrefixEntry:
+    """One full page of the prefix index.  ``key`` is the chained hash of
+    every token up to and including this page, so matching a prompt is a
+    walk from the root; ``parent`` is the previous page's chain hash
+    (None at depth 0).  The index holds its own pool reference on
+    ``page`` — the page outlives the slot that wrote it."""
+    page: int
+    parent: Optional[int]
+    last_used: int
 
 
 class PagedKVCache:
@@ -121,7 +195,8 @@ class PagedKVCache:
 
     def __init__(self, cfg: ModelConfig, slots: int, max_len: int, dtype,
                  *, page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 prefix_caching: bool = True):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         if max_len % page_size:
@@ -136,7 +211,10 @@ class PagedKVCache:
         # capacity classes present in this architecture
         caps: Dict[str, int] = {}
         per_layer_page_elems: Dict[str, int] = {}
+        has_ssm = has_moe = False
         for spec in cfg.layer_specs():
+            if spec.mlp == "moe":
+                has_moe = True
             if spec.attn == "gqa":
                 key = paged_cache_key(spec)
                 caps[key] = spec.window if spec.window is not None \
@@ -148,6 +226,8 @@ class PagedKVCache:
                 per_layer_page_elems["full"] = \
                     per_layer_page_elems.get("full", 0) + page_size * (
                         cfg.mla.kv_lora_rank + cfg.mla.rope_dim)
+            if spec.ssm is not None:
+                has_ssm = True
 
         itemsize = jnp.dtype(dtype).itemsize
         self.classes: Dict[str, _CacheClass] = {}
@@ -163,10 +243,29 @@ class PagedKVCache:
                 capacity=cap,
                 table_width=width,
                 pool=PagePool(n),
-                table=np.zeros((slots, width), np.int32),
+                # sentinel-filled: an out-of-range id on every row that is
+                # not backed by an owned page (reads clamp + are masked by
+                # kv_len; writes drop via scatter mode="drop")
+                table=np.full((slots, width), n, np.int32),
                 owned=[[] for _ in range(slots)],
                 bytes_per_page=per_layer_page_elems[key] * itemsize,
             )
+
+        # prefix reuse needs every class to address positions from zero and
+        # all per-position state to live in pages: windowed rings hold only
+        # each sequence's own trailing window, and SSM state is a running
+        # summary — neither reconstructs another request's prefix boundary.
+        # MoE layers gate off too: expert capacity is a function of the
+        # prefilled chunk length (ceil(S·k/E·factor)), so a tail-only
+        # prefill would route tokens differently than the full prompt —
+        # greedy streams would no longer be identical with the cache off.
+        self.prefix_supported = (not has_ssm) and (not has_moe) \
+            and set(caps) <= {"full"}
+        self.prefix_enabled = bool(prefix_caching) and self.prefix_supported
+        self._prefix: Dict[int, _PrefixEntry] = {}
+        self._prefix_tick = 0
+        self._cow_fns: Dict[str, object] = {}
+        self.stats = {"prefix_evictions": 0}
 
         self.caches = tf.init_paged_cache(cfg, slots, pool_sizes, page_size,
                                           dtype)
@@ -178,6 +277,9 @@ class PagedKVCache:
         ) - self._physical_page_bytes
 
     # -- allocation ---------------------------------------------------------
+
+    def _sentinel(self, c: _CacheClass) -> int:
+        return c.pool.num_pages
 
     def pages_needed(self, key: str, kv_target: int) -> int:
         c = self.classes[key]
@@ -195,64 +297,317 @@ class PagedKVCache:
                     f"only {c.pool.num_pages}; raise num_pages or shorten "
                     f"the request")
 
+    def _evictable_pages(self, key: str, c: _CacheClass) -> int:
+        if key != "full" or not self.prefix_enabled:
+            return 0
+        return sum(1 for e in self._prefix.values()
+                   if c.pool.refcount(e.page) == 1)
+
     def can_grow(self, slot: int, kv_target: int) -> bool:
         return all(
             self.pages_needed(k, kv_target) - len(c.owned[slot])
-            <= c.pool.free_pages
+            <= c.pool.free_pages + self._evictable_pages(k, c)
             for k, c in self.classes.items())
 
     def grow(self, slot: int, kv_target: int) -> bool:
         """Extend ``slot``'s tables to cover ``kv_target`` tokens in every
         class.  All-or-nothing: returns False (state unchanged) when any
-        pool is short."""
+        pool is short even after evicting reusable-prefix pages."""
         if not self.can_grow(slot, kv_target):
             return False
         for key, c in self.classes.items():
             need = self.pages_needed(key, kv_target)
             have = len(c.owned[slot])
             if need > have:
+                if need - have > c.pool.free_pages:
+                    self._evict_prefix(c, need - have)
                 got = c.pool.alloc(need - have)
                 c.table[slot, have:need] = got
                 c.owned[slot].extend(got)
+        self._touch_peaks()
         return True
 
-    def release(self, slot: int) -> None:
-        """Return every page the slot owns (completion / preemption) and
-        reset its table rows to the sentinel page 0 — reads through stale
-        rows are masked by kv_len, writes by the engine's validity masks."""
-        for c in self.classes.values():
+    def release(self, slot: int,
+                tokens: Optional[np.ndarray] = None) -> None:
+        """Drop every page reference the slot owns and reset its table
+        rows to the out-of-range sentinel (reads through stale rows are
+        masked by kv_len and clamped; writes drop).  With ``tokens`` (the
+        slot's full token stream, completion path) the slot's full pages
+        are first demoted into the reusable-prefix index — the index takes
+        its own reference, so those pages survive the release until reused
+        or evicted."""
+        if tokens is not None and self.prefix_enabled:
+            c = self.classes["full"]
             if c.owned[slot]:
-                c.pool.free(c.owned[slot])
-                c.owned[slot] = []
-            c.table[slot] = 0
+                hashes = self._chain_hashes(tokens)
+                if len(tokens) % self.page_size == 0 and hashes:
+                    # the stream's final position L-1 sits in the last full
+                    # page, and the fused decode loop keeps issuing masked
+                    # steps for a slot whose budget is spent while others
+                    # decode — those steps rewrite position L-1 with the
+                    # dummy token's K/V, so that page's content can no
+                    # longer be trusted to match the token hash: never
+                    # demote it (a partial final page is skipped anyway)
+                    hashes = hashes[:-1]
+                self._register(hashes[:len(c.owned[slot])], c.owned[slot])
+        for c in self.classes.values():
+            for p in c.owned[slot]:
+                c.pool.unref(p)
+            c.owned[slot] = []
+            c.table[slot] = self._sentinel(c)
 
     def tables(self) -> Dict[str, jnp.ndarray]:
-        """Device block tables for one dispatch (tiny int32 uploads)."""
+        """Device block tables for one dispatch (tiny int32 uploads).
+        Asserts the sentinel invariant: a live (owned) table row never
+        holds the sentinel — only unbacked rows do."""
+        for k, c in self.classes.items():
+            for slot, owned in enumerate(c.owned):
+                if owned and int(c.table[slot, :len(owned)].max()) \
+                        >= c.pool.num_pages:
+                    raise AssertionError(
+                        f"class '{k}' slot {slot}: live block-table row "
+                        f"holds the sentinel page")
         return {k: jnp.asarray(c.table) for k, c in self.classes.items()}
 
+    # -- prefix cache -------------------------------------------------------
+
+    def _tick(self) -> int:
+        self._prefix_tick += 1
+        return self._prefix_tick
+
+    def _chain_hashes(self, tokens) -> List[int]:
+        """Chained hashes over the *full* pages of a token stream: entry i
+        hashes (parent chain, page i's tokens), so equal chain hash ⇒
+        equal token prefix (modulo 64-bit hash collisions, the standard
+        prefix-cache trade)."""
+        ps = self.page_size
+        hashes: List[int] = []
+        parent: Optional[int] = None
+        for i in range(len(tokens) // ps):
+            h = hash((parent,
+                      tuple(int(t) for t in tokens[i * ps:(i + 1) * ps])))
+            hashes.append(h)
+            parent = h
+        return hashes
+
+    def _register(self, hashes: List[int], row: List[int]) -> None:
+        """Insert chain entries for pages not yet indexed; the index takes
+        a reference on each inserted page.  Existing entries win (their
+        content is hash-equal), so duplicate prefills dedupe here."""
+        for i, h in enumerate(hashes):
+            e = self._prefix.get(h)
+            if e is not None:
+                e.last_used = self._tick()
+                continue
+            self.classes["full"].pool.ref(row[i])
+            self._prefix[h] = _PrefixEntry(
+                page=row[i], parent=hashes[i - 1] if i else None,
+                last_used=self._tick())
+
+    def _evict_prefix(self, c: _CacheClass, need: int,
+                      protect: frozenset = frozenset()) -> bool:
+        """Free index-only pages (LRU) until ``need`` pages are free.
+        Evicting an entry drops its whole subtree — descendants are only
+        matchable through it; their pages survive if a live slot still
+        references them.  Entries in ``protect`` (e.g. the chain an
+        in-flight admission just matched but has not ref'd yet) are never
+        chosen as victims; since every ancestor of a protected entry is
+        itself protected (chains are matched from the root), no protected
+        entry can fall inside an evicted subtree either."""
+        while c.pool.free_pages < need:
+            victim = None
+            for h, e in self._prefix.items():
+                if h in protect:
+                    continue
+                if c.pool.refcount(e.page) == 1 and (
+                        victim is None
+                        or e.last_used < self._prefix[victim].last_used):
+                    victim = h
+            if victim is None:
+                return False
+            stack = [victim]
+            while stack:
+                h = stack.pop()
+                e = self._prefix.pop(h, None)
+                if e is None:
+                    continue
+                stack.extend(h2 for h2, e2 in self._prefix.items()
+                             if e2.parent == h)
+                c.pool.unref(e.page)
+                self.stats["prefix_evictions"] += 1
+        return True
+
+    def clear_prefix(self) -> int:
+        """Drop every index entry (e.g. after engine warmup, or to drain
+        the pool).  Returns the number of entries dropped."""
+        n = len(self._prefix)
+        c = self.classes.get("full")
+        for e in self._prefix.values():
+            c.pool.unref(e.page)
+        self._prefix.clear()
+        return n
+
+    def _match(self, hashes: List[int]) -> int:
+        m = 0
+        for h in hashes:
+            if h not in self._prefix:
+                break
+            m += 1
+        return m
+
+    def match_prefix(self, tokens) -> int:
+        """Longest indexed prefix of ``tokens``, in full pages."""
+        return self._match(self._chain_hashes(tokens))
+
+    def admit(self, slot: int, tokens, kv_target: int) -> Optional[dict]:
+        """Build ``slot``'s block table for a request: map the longest
+        indexed prefix (shared pages, one reference each), schedule a COW
+        copy of the single page a tail prefill could write into (only when
+        the prompt is exactly page-aligned with the hit — at least one
+        token is always re-prefilled so decode has last-token logits),
+        allocate fresh pages for the rest, and pre-register the prompt's
+        full pages so admissions later in the same batch can share them
+        (the engine dispatches cold groups first, so writers always
+        precede readers).
+
+        The COW copy is *deferred*: the source page may be written by a
+        colder group of the same admission batch, so the engine must call
+        :meth:`apply_cow` with the returned ``cow_pairs`` after every
+        earlier group has dispatched and before this slot's own prefill
+        (the pair holds a pool reference on the source page until then).
+
+        All-or-nothing: returns None (state unchanged) when the pool is
+        short even after LRU eviction; otherwise
+        ``{"cached_len", "reused", "cow_pairs"}``."""
+        if not self.prefix_enabled:
+            if not self.grow(slot, kv_target):
+                return None
+            return {"cached_len": 0, "reused": 0, "cow_pairs": []}
+
+        c = self.classes["full"]
+        if c.owned[slot]:
+            raise RuntimeError(f"admit into non-empty slot {slot}")
+        n_tok = len(tokens)
+        hashes = self._chain_hashes(tokens)
+        m = self._match(hashes)
+        cow = m > 0 and m * self.page_size == n_tok
+        cached_len = n_tok - 1 if cow else m * self.page_size
+        need_width = self.pages_needed("full", kv_target)
+        fresh = need_width - m + (1 if cow else 0)
+        if fresh > c.pool.free_pages and not self._evict_prefix(
+                c, fresh, protect=frozenset(hashes[:m])):
+            return None
+        got = c.pool.alloc(fresh)
+        if got is None:                      # pragma: no cover - guarded
+            return None
+        shared = []
+        for h in hashes[:m]:
+            e = self._prefix[h]
+            e.last_used = self._tick()
+            c.pool.ref(e.page)
+            shared.append(e.page)
+        cow_pairs = []
+        if cow:
+            # the slot owns the copy target; the matched source page keeps
+            # the reference taken above until apply_cow() releases it
+            cow_pairs.append(("full", shared[-1], got[0]))
+            shared[-1] = got[0]
+            row = shared + got[1:]
+        else:
+            row = shared + got
+        c.table[slot, :len(row)] = row
+        c.table[slot, len(row):] = self._sentinel(c)
+        c.owned[slot] = list(row)
+        self._register(hashes, row)
+        self._touch_peaks()
+        return {"cached_len": cached_len,
+                "reused": cached_len if m else 0,
+                "cow_pairs": cow_pairs}
+
+    def _cow_fn(self, key: str):
+        """Jit'd ``pages[dst] = pages[src]`` over every layer of a class,
+        with the cache tree donated (off CPU) so the copy updates the pool
+        in place instead of materializing a second full allocation per
+        layer.  ``src``/``dst`` are device operands — one executable
+        serves every COW of the class."""
+        fn = self._cow_fns.get(key)
+        if fn is None:
+            donate = (0,) if jax.default_backend() != "cpu" else ()
+            fn = jax.jit(
+                lambda caches, src, dst: tf.copy_cache_pages(
+                    self.cfg, caches, key, src, dst),
+                donate_argnums=donate)
+            self._cow_fns[key] = fn
+        return fn
+
+    def apply_cow(self, caches, cow_pairs: List[Tuple[str, int, int]]):
+        """Materialize deferred COW copies (``pages[dst] = pages[src]``
+        per class) and release the source-page references
+        :meth:`admit` held for them.  Returns the rebuilt cache tree."""
+        for key, src, dst in cow_pairs:
+            caches = self._cow_fn(key)(
+                caches, jnp.asarray(src, jnp.int32),
+                jnp.asarray(dst, jnp.int32))
+            self.classes[key].pool.unref(src)
+        return caches
+
     # -- accounting ---------------------------------------------------------
+
+    def _live_pages(self, c: _CacheClass) -> int:
+        live = set()
+        for owned in c.owned:
+            live.update(owned)
+        return len(live)
+
+    def _touch_peaks(self) -> None:
+        for c in self.classes.values():
+            c.peak_live_pages = max(c.peak_live_pages, self._live_pages(c))
+
+    def reset_peaks(self) -> None:
+        for c in self.classes.values():
+            c.pool.peak_in_use = 0
+            c.peak_live_pages = 0
 
     @property
     def pages_in_use(self) -> Dict[str, int]:
         return {k: c.pool.pages_in_use for k, c in self.classes.items()}
 
     def memory_stats(self) -> dict:
-        """Resident = pages holding live tokens; physical = the whole pool
-        allocation (device arrays are static).  SSM slot state is counted
-        separately — it is O(slots), independent of sequence length."""
-        resident = sum(c.pool.pages_in_use * c.bytes_per_page
-                       for c in self.classes.values())
-        peak = sum(c.pool.peak_in_use * c.bytes_per_page
+        """Resident = distinct pages referenced by live slots (shared
+        prefix pages count once); reusable-prefix pages held only by the
+        index are reported separately — they are reclaimable on demand.
+        Physical = the whole pool allocation (device arrays are static).
+        SSM slot state is counted separately — it is O(slots), independent
+        of sequence length."""
+        live = {k: self._live_pages(c) for k, c in self.classes.items()}
+        resident = sum(live[k] * c.bytes_per_page
+                       for k, c in self.classes.items())
+        peak = sum(c.peak_live_pages * c.bytes_per_page
                    for c in self.classes.values())
+        full = self.classes.get("full")
+        prefix_pages = len(self._prefix)
+        prefix_only = 0 if full is None else \
+            self._evictable_pages("full", full)
         return {
             "page_size": self.page_size,
             "num_pages": {k: c.pool.num_pages
                           for k, c in self.classes.items()},
             "pages_in_use": self.pages_in_use,
+            "live_pages": live,
             "peak_pages_in_use": {k: c.pool.peak_in_use
                                   for k, c in self.classes.items()},
+            "peak_live_pages": {k: c.peak_live_pages
+                                for k, c in self.classes.items()},
             "resident_cache_bytes": resident,
             "peak_resident_cache_bytes": peak,
             "physical_cache_bytes": self._physical_page_bytes,
             "ssm_state_bytes": self._state_bytes,
+            "prefix_cache": {
+                "enabled": self.prefix_enabled,
+                "entries": prefix_pages,
+                "evictable_pages": prefix_only,
+                "reusable_prefix_bytes": 0 if full is None else
+                    prefix_only * full.bytes_per_page,
+                "evictions": self.stats["prefix_evictions"],
+            },
         }

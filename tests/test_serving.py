@@ -137,9 +137,9 @@ def test_prefill_jit_keys_are_length_bucketed():
     serve_len(5)
     keys_after_first = set(engine._prefill_fns)
     serve_len(7)                       # same bucket (8) → no new key
-    assert set(engine._prefill_fns) == keys_after_first == {(1, 8)}
+    assert set(engine._prefill_fns) == keys_after_first == {(1, 8, 0)}
     serve_len(9)                       # next bucket (16) → one new key
-    assert set(engine._prefill_fns) == {(1, 8), (1, 16)}
+    assert set(engine._prefill_fns) == {(1, 8, 0), (1, 16, 0)}
 
     # bucketing must not perturb the greedy stream: same prompt through a
     # bucketed engine and via the manual per-token reference path
