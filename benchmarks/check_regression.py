@@ -1,0 +1,121 @@
+"""Serving perf-regression gate: compare a fresh BENCH json to the
+committed baseline.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      --bench BENCH_serving.json --baseline BENCH_baseline.json \
+      --key serving_smoke
+
+Exits non-zero (failing the CI step) when measured ``tok_per_s`` drops
+below ``min_tok_per_s_ratio`` x the baseline (default 0.7 — wide enough
+for runner jitter, tight enough to catch a dispatch-economics or
+compile-cache regression), or when ``tokens_reused`` falls below the
+baseline floor (the prefix cache silently degrading would otherwise only
+show up as a slow tok/s drift).  The gate is applied to the top-level
+(primary-layout) tok/s AND per layout for every entry in the baseline's
+``layouts`` block — the smoke's primary layout is dense, so without the
+per-layout floors a regression confined to the paged/prefix paths (the
+code serving PRs actually touch) would pass unseen.  TTFT is reported
+but not gated — p50 of an 8-request smoke is too noisy for a hard
+bound.
+
+Refresh procedure (after an intentional perf change): see EXPERIMENTS.md
+"Perf regression gate".
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def tokens_reused(metrics: dict) -> int:
+    """Best paged-layout tokens_reused in a serve-bench metrics dict."""
+    layouts = metrics.get("layouts", {})
+    return max((m.get("prefix", {}).get("tokens_reused", 0)
+                for m in layouts.values()), default=0)
+
+
+def check(metrics: dict, baseline_all: dict, key: str,
+          leg: str = "") -> list:
+    """Gate ``metrics`` against baseline entry ``key``.  With ``leg``
+    (the CI matrix leg, e.g. "oldest"/"newest"), an entry named
+    ``"<key>@<leg>"`` overrides the shared one — different jax versions
+    can have legitimately different dispatch-overhead tok/s, so a leg
+    whose numbers drift from the shared baseline gets its own floors
+    instead of leaving that leg permanently red (or the gate permanently
+    loose)."""
+    base = None
+    if leg:
+        base = baseline_all.get(f"{key}@{leg}")
+        if base is not None:
+            key = f"{key}@{leg}"
+    if base is None:
+        base = baseline_all.get(key)
+    if base is None:
+        return [f"baseline has no entry {key!r}"]
+    ratio = float(baseline_all.get("min_tok_per_s_ratio", 0.7))
+    failures = []
+    tok = float(metrics["tok_per_s"])
+    floor = ratio * float(base["tok_per_s"])
+    print(f"[{key}] tok/s measured {tok:.1f} vs baseline "
+          f"{base['tok_per_s']} (gate: >= {floor:.1f})")
+    if tok < floor:
+        failures.append(
+            f"tok/s regression: {tok:.1f} < {ratio} x "
+            f"{base['tok_per_s']} baseline")
+    for lo, base_tok in base.get("layouts", {}).items():
+        m_lo = metrics.get("layouts", {}).get(lo)
+        if m_lo is None:
+            failures.append(f"layout {lo!r} missing from the bench run "
+                            f"but gated by the baseline")
+            continue
+        tok_lo = float(m_lo["tok_per_s"])
+        print(f"[{key}] {lo} tok/s measured {tok_lo:.1f} vs baseline "
+              f"{base_tok} (gate: >= {ratio * float(base_tok):.1f})")
+        if tok_lo < ratio * float(base_tok):
+            failures.append(
+                f"{lo} tok/s regression: {tok_lo:.1f} < {ratio} x "
+                f"{base_tok} baseline")
+    ttft = metrics.get("ttft_s", {}).get("p50")
+    if ttft is not None:
+        print(f"[{key}] TTFT p50 {ttft}s vs baseline "
+              f"{base.get('ttft_p50_s')}s (informational)")
+    reused = tokens_reused(metrics)
+    base_reused = int(base.get("tokens_reused", 0))
+    print(f"[{key}] tokens_reused {reused} vs baseline floor {base_reused}")
+    if reused < base_reused:
+        failures.append(
+            f"prefix-cache regression: tokens_reused {reused} < "
+            f"baseline {base_reused}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="BENCH_serving.json")
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--key", default="serving_smoke",
+                    help="baseline entry to gate against "
+                         "(serving_smoke | prefix_smoke)")
+    ap.add_argument("--leg", default="",
+                    help="CI matrix leg (oldest | newest); a baseline "
+                         "entry '<key>@<leg>' overrides the shared one")
+    args = ap.parse_args(argv)
+
+    with open(args.bench) as fh:
+        metrics = json.load(fh)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    failures = check(metrics, baseline, args.key, leg=args.leg)
+    for f in failures:
+        print(f"FAIL: {f}", file=sys.stderr)
+    if failures:
+        print("(intentional change? refresh BENCH_baseline.json — see "
+              "EXPERIMENTS.md 'Perf regression gate')", file=sys.stderr)
+        return 1
+    print(f"[{args.key}] perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

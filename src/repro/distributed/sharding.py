@@ -18,6 +18,18 @@ attention/MLP blocks — used by the long-context perf configs).
 Rules compose hierarchically for multi-pod meshes: the "pod" axis stacks
 onto the data axis everywhere (gradient all-reduce becomes hierarchical:
 reduce-scatter intra-pod over ICI, all-reduce across pods over DCN).
+
+Paged-pool sharding (:class:`KVShard`): the serving tier's page pools
+(``repro.serving.kv_cache``) shard along the *kv-head* axis of every page
+array (GQA ``k_pages/v_pages`` — head axis; MLA ``ckv_pages/krope_pages``
+— the latent-rank axis, MLA's analogue of the head axis for storage),
+while the page dimension itself stays complete on every device.  Page ids
+are therefore global: block tables, free lists, and the prefix index stay
+replicated host-side and all admission / growth / preemption / COW logic
+is unchanged.  :func:`validate_kv_shard` rejects head/rank counts the
+mesh axis does not divide — an uneven split would silently replicate (the
+``_divisible`` rule) and report wrong per-device memory, so it is an
+error instead.
 """
 from __future__ import annotations
 
@@ -27,6 +39,117 @@ from typing import Any, Optional, Sequence
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def shard_map_fn():
+    """The ``shard_map`` entry point across supported jax versions:
+    ``jax.shard_map`` on jax >= 0.6, ``jax.experimental.shard_map`` on the
+    0.4.x line.  Returns a ``wrap(f, mesh=, in_specs=, out_specs=)``
+    callable with the static replication check disabled — the paged
+    attention paths all-gather head shards back to replicated outputs,
+    which the 0.4.x checker cannot statically infer (the kwarg is
+    ``check_rep`` there, ``check_vma`` on new jax, hence the probe)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+
+    def wrap(f, *, mesh, in_specs, out_specs):
+        # the check kwarg must actually be disabled — constructing with
+        # the default check enabled would only defer the failure to an
+        # opaque trace-time replication error, so an unknown signature
+        # raises here instead of falling back
+        for kw in ({"check_rep": False}, {"check_vma": False}):
+            try:
+                return sm(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+            except TypeError:
+                continue
+        raise RuntimeError(
+            f"shard_map on jax {jax.__version__} accepts neither "
+            "check_rep nor check_vma — the kwarg was renamed again; "
+            "update repro.distributed.sharding.shard_map_fn")
+
+    return wrap
+
+
+@dataclasses.dataclass(frozen=True)
+class KVShard:
+    """Device sharding of the paged KV pool: pages split along the kv-head
+    (GQA) / latent-rank (MLA) axis over one mesh axis.  Threaded through
+    ``Runtime.kv_shard`` into the paged attention ops, which run their
+    page reads/writes and per-head decode under ``shard_map`` and
+    all-gather head outputs so downstream math is replicated — greedy
+    token streams stay bit-identical to the unsharded paged path."""
+    mesh: Mesh
+    axis: str = "model"
+
+    @property
+    def size(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    def spec(self, ndim: int, dim: int) -> P:
+        """PartitionSpec sharding dimension ``dim`` of an ``ndim`` array
+        over this shard's mesh axis (negative ``dim`` ok)."""
+        parts = [None] * ndim
+        parts[dim] = self.axis
+        return P(*parts)
+
+    @property
+    def replicated(self) -> P:
+        return P()
+
+
+def validate_kv_shard(cfg, tp: int) -> None:
+    """Reject configs whose paged-pool shard axes the mesh does not
+    divide.  GQA pages shard on ``n_kv_heads`` (query heads follow: Hq =
+    Hkv x group); MLA latent pages shard on ``kv_lora_rank`` and
+    ``rope_dim``.  Raising here beats the silent alternative — an uneven
+    axis would fall back to replication and per-device residency would be
+    tp x the promised bytes."""
+    if tp <= 1:
+        return
+    problems = []
+    attns = {spec.attn for spec in cfg.layer_specs()}
+    if "gqa" in attns and cfg.n_kv_heads % tp:
+        problems.append(
+            f"n_kv_heads={cfg.n_kv_heads} is not divisible by tp={tp}")
+    if "mla" in attns:
+        if cfg.mla.kv_lora_rank % tp:
+            problems.append(
+                f"mla.kv_lora_rank={cfg.mla.kv_lora_rank} is not "
+                f"divisible by tp={tp}")
+        if cfg.mla.rope_dim % tp:
+            problems.append(
+                f"mla.rope_dim={cfg.mla.rope_dim} is not divisible by "
+                f"tp={tp}")
+    if problems:
+        raise ValueError(
+            "cannot shard the paged KV pool over "
+            f"{tp} devices: " + "; ".join(problems) +
+            " — pick a tp that divides the kv-head/latent axes, or serve "
+            "this config unsharded (mesh=None)")
+
+
+#: paged-cache leaf name → the dimension (from the right) that shards:
+#: GQA page arrays are [..., P, page_size, Hkv, dh] (head axis at -2);
+#: MLA latent pages are [..., P, page_size, r] (rank axis at -1).
+_PAGED_SHARD_DIMS = {"k_pages": -2, "v_pages": -2,
+                     "ckv_pages": -1, "krope_pages": -1}
+
+
+def paged_cache_shardings(caches, shard: KVShard):
+    """NamedShardings for an ``init_paged_cache`` tree: page arrays shard
+    per :data:`_PAGED_SHARD_DIMS` (counting from the right, so stacked
+    runs' leading repeats axis needs no special-casing); everything else
+    (SSM slot state) is replicated."""
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        dim = _PAGED_SHARD_DIMS.get(name)
+        if dim is None:
+            return NamedSharding(shard.mesh, P())
+        return NamedSharding(shard.mesh, shard.spec(leaf.ndim, dim))
+
+    return jax.tree_util.tree_map_with_path(one, caches)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -21,6 +21,13 @@ Split boundaries stay page-aligned (``splits`` divides the table width,
 ``block_k`` divides ``page_size``) and the partials combine with the same
 associative running-max algebra — the cascade is indifferent to where the
 keys physically live.
+
+Both kernels are grid-parallel over B·Hkv fibers with no cross-head
+communication, which is what lets the serving tier run them on kv-head
+*shards* of a device-partitioned page pool (``shard_map`` in
+``repro.model.attention``): a shard's ``hkv`` is just a smaller fiber
+count, the block table and page ids are global, and per-fiber results
+match the full-pool run bit-for-bit.
 """
 from __future__ import annotations
 

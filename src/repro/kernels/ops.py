@@ -431,6 +431,15 @@ def fusemax_decode_paged(
     so outputs are bit-identical to :func:`fusemax_decode` over the dense
     layout.  The Pallas path runs the true paged kernel (block-table lookup
     in the index_map, page-aligned splits from the autotuner).
+
+    Shard contract (device-sharded pools): every computation here is
+    independent per (batch, kv-head) fiber and the autotuned
+    ``splits``/``block_k`` depend only on the page geometry and the
+    head-group ratio — both invariant under kv-head sharding — so the
+    attention layer may call this on a kv-head *shard* of
+    (q, k_pages, v_pages) under ``shard_map`` (the block table is
+    replicated; page ids are global) and get results bit-identical to
+    the corresponding head slice of the full-pool call.
     """
     b, hq, p, e = q.shape
     n_pages, page_size, hkv, f = v_pages.shape

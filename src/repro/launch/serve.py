@@ -20,12 +20,19 @@ the head from resident pages and prefills only the tails — the bench
 reports hit rate / tokens reused / COW copies / prefill-dispatch savings
 and additionally cross-checks greedy outputs against a paged engine with
 the prefix cache disabled.
+``--mesh tp=N`` additionally serves the trace with the paged pool
+*device-sharded* over an N-way mesh (kv-head / latent-rank partitioning,
+``paged_sharded`` layout) — outputs_match then asserts sharded ==
+single-device greedy streams and ``memory.sharding.per_device`` reports
+the 1/tp residency.  On CPU set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -53,8 +60,32 @@ def _trace_lens(args) -> list:
     return lens
 
 
+def _parse_mesh(arg: Optional[str]):
+    """``--mesh tp=N`` → a 1-axis ("model",) mesh of N devices (the paged
+    pool shards over it).  None/empty/tp=1 → no mesh."""
+    if not arg:
+        return None
+    try:
+        key, n = arg.split("=")
+        n = int(n)
+    except ValueError:
+        raise SystemExit(f"--mesh expects tp=N, got {arg!r}")
+    if key != "tp":
+        raise SystemExit(f"--mesh expects tp=N, got {arg!r}")
+    if n <= 1:
+        return None
+    if n > jax.device_count():
+        raise SystemExit(
+            f"--mesh tp={n} needs {n} devices but only "
+            f"{jax.device_count()} are visible (CPU smoke: set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"before jax imports)")
+    from repro.launch.mesh import make_mesh
+    return make_mesh((n,), ("model",))
+
+
 def _serve_one_layout(args, cfg, params, rt, layout: str,
-                      prefix_caching: bool = True) -> dict:
+                      prefix_caching: bool = True, mesh=None) -> dict:
     engine = ServeEngine(cfg, params, slots=args.slots,
                          max_len=args.max_len, rt=rt,
                          temperature=args.temperature,
@@ -63,7 +94,8 @@ def _serve_one_layout(args, cfg, params, rt, layout: str,
                          cache_layout=layout,
                          page_size=args.page_size,
                          num_pages=args.num_pages,
-                         prefix_caching=prefix_caching)
+                         prefix_caching=prefix_caching,
+                         mesh=mesh)
     lens = _trace_lens(args)
     warmup_s = None
     if not args.no_warmup:
@@ -151,6 +183,10 @@ def serve_bench(args) -> dict:
 
     layouts = ["dense", "paged"] if args.cache_layout == "both" \
         else [args.cache_layout]
+    mesh = _parse_mesh(getattr(args, "mesh", None))
+    if mesh is not None and "paged" not in layouts:
+        raise SystemExit("--mesh shards the paged pool; add "
+                         "--cache-layout paged (or both)")
     per_layout = {lo: _serve_one_layout(
         args, cfg, params, rt, lo,
         prefix_caching=not args.no_prefix_cache) for lo in layouts}
@@ -161,6 +197,15 @@ def serve_bench(args) -> dict:
         per_layout["paged_noprefix"] = _serve_one_layout(
             args, cfg, params, rt, "paged", prefix_caching=False)
         layouts = layouts + ["paged_noprefix"]
+    if mesh is not None:
+        # device-sharded pool: serve the identical trace once more with
+        # the pool partitioned over the mesh — outputs_match then covers
+        # sharded vs single-device, and memory.sharding.per_device shows
+        # the 1/tp residency
+        per_layout["paged_sharded"] = _serve_one_layout(
+            args, cfg, params, rt, "paged",
+            prefix_caching=not args.no_prefix_cache, mesh=mesh)
+        layouts = layouts + ["paged_sharded"]
 
     outputs = [per_layout[lo].pop("_outputs") for lo in layouts]
     metrics = {
@@ -188,6 +233,13 @@ def serve_bench(args) -> dict:
         d, p = per_layout["dense"], per_layout["paged"]
         metrics["paged_vs_dense_tok_per_s"] = round(
             p["tok_per_s"] / max(d["tok_per_s"], 1e-9), 3)
+    if mesh is not None:
+        metrics["mesh"] = {"tp": int(mesh.shape["model"]),
+                           "axes": list(mesh.axis_names)}
+        if "paged" in per_layout:
+            metrics["sharded_vs_paged_tok_per_s"] = round(
+                per_layout["paged_sharded"]["tok_per_s"] /
+                max(per_layout["paged"]["tok_per_s"], 1e-9), 3)
     return metrics
 
 
@@ -230,6 +282,14 @@ def main(argv=None) -> dict:
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable automatic prefix caching on the paged "
                          "layout")
+    ap.add_argument("--mesh", default=None,
+                    help="shard the paged pool across devices: tp=N "
+                         "partitions every page array's kv-head / "
+                         "latent-rank axis over an N-device mesh and "
+                         "serves the trace once more as the "
+                         "'paged_sharded' layout (cross-checked via "
+                         "outputs_match; per-device bytes under "
+                         "memory.sharding)")
     ap.add_argument("--json", default="BENCH_serving.json",
                     help="write metrics here ('' to disable)")
     ap.add_argument("--no-compile-cache", action="store_true",
@@ -256,6 +316,13 @@ def main(argv=None) -> dict:
               f"({mem['bytes_per_live_token']} B/live-token), "
               f"physical {mem['physical_cache_bytes']} B, "
               f"preemptions {m['preemptions']}")
+        sh = mem.get("sharding")
+        if sh:
+            pd = sh["per_device"]
+            print(f"    pool sharded tp={sh['tp']} over '{sh['axis']}': "
+                  f"per-device peak resident "
+                  f"{pd['peak_resident_cache_bytes']} B, physical "
+                  f"{pd['physical_cache_bytes']} B")
         pf = m.get("prefix", {})
         if pf.get("tokens_reused"):
             print(f"    prefix cache: {pf['hits']} hits "

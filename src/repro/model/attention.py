@@ -32,6 +32,23 @@ points marks each row's real prompt length inside a padded (power-of-two
 bucketed) batch.  Writes beyond a row's true length are masked (dropped
 for paged caches, OOB-slot-dropped for dense rings); full dense caches
 tolerate the garbage (masked at read, overwritten by decode).
+
+Device-sharded pools (``rt.kv_shard``, a
+:class:`repro.distributed.sharding.KVShard`): page arrays are partitioned
+along the kv-head axis (GQA) / latent-rank axis (MLA) over one mesh axis,
+with the *page dimension complete on every device* — block tables and
+page ids are global, so the host-side allocator is oblivious to the
+sharding.  The paged read/write + attention paths then run under
+``shard_map``: each device writes and attends only its own head (rank)
+slice of the pool, and attention outputs are all-gathered back to the
+full head axis *inside* the mapped region so every downstream op (the
+output projection in particular, whose head contraction would otherwise
+become an order-sensitive cross-device psum) runs replicated on
+identically-ordered operands — greedy token streams stay bit-identical
+to the single-device paged path.  MLA shards storage only (the absorbed
+decode gathers the full latent view per step — the same per-step gather
+the unsharded path already does); GQA shards both storage and decode
+compute head-parallel.
 """
 from __future__ import annotations
 
@@ -42,6 +59,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import LayerSpec, ModelConfig
+from repro.distributed.sharding import shard_map_fn
 from repro.kernels.ops import (
     fusemax_attention, fusemax_decode, fusemax_decode_paged, gather_pages,
 )
@@ -302,6 +320,67 @@ def _gqa_capacity(cache: dict, bt_rows: jnp.ndarray,
         else bt_rows.shape[1] * page_size
 
 
+def _gqa_paged_attend(
+    q: jnp.ndarray, k_new: jnp.ndarray, v_new: jnp.ndarray,
+    k_pages: jnp.ndarray, v_pages: jnp.ndarray, bt_rows: jnp.ndarray,
+    off: int, cap: int, cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
+) -> jnp.ndarray:
+    """Attention for a paged prefill chunk, *before* the chunk's writes
+    land: queries [off, off+S) attend the cached history (gathered through
+    the block-table rows) plus the chunk's own fresh K/V.  Returns the
+    pre-output-projection attention output [B, H, S, F].
+
+    Every operation is independent per kv-head fiber, so this body runs
+    unchanged on a kv-head *shard* of (q, k_new, v_new, pages) under
+    ``shard_map`` — the per-head arithmetic (and the autotuned tiles,
+    which depend only on lengths and the unchanged head-group ratio) is
+    bit-identical to the full-head call."""
+    if off == 0:
+        # no history: attend the chunk itself (matches gqa_forward)
+        return fusemax_attention(
+            q, k_new, v_new,
+            causal=cfg.causal, window=spec.window, softcap=cfg.attn_softcap,
+            impl=rt.attn_impl, block_q=rt.block_q, block_k=rt.block_k,
+            exp_impl=rt.exp_impl, interpret=rt.interpret,
+            unroll_scan=rt.unroll_runs,
+        )
+    if spec.window is None:
+        # gather only the pages the prefix occupies (off is static)
+        hp = -(-off // k_pages.shape[1])
+        k_hist = jnp.moveaxis(
+            gather_pages(k_pages, bt_rows[:, :hp]), 2, 1)[:, :, :off]
+        v_hist = jnp.moveaxis(
+            gather_pages(v_pages, bt_rows[:, :hp]), 2, 1)[:, :, :off]
+        # chunk K/V rounded to the cache dtype first — the dense path reads
+        # them back out of the cache it just wrote
+        return fusemax_attention(
+            q, jnp.concatenate([k_hist, k_new.astype(k_hist.dtype)], axis=2),
+            jnp.concatenate([v_hist, v_new.astype(v_hist.dtype)], axis=2),
+            causal=cfg.causal, softcap=cfg.attn_softcap, q_offset=off,
+            impl=rt.attn_impl, block_q=rt.block_q, block_k=rt.block_k,
+            exp_impl=rt.exp_impl, interpret=rt.interpret,
+            unroll_scan=rt.unroll_runs,
+        )
+    # ring continuation: gather the still-needed history band from the
+    # ring pages before this chunk's writes land
+    w = spec.window
+    klo = max(0, off - w + 1)
+    l = jnp.arange(klo, off) % cap
+    page_size = k_pages.shape[1]
+    pg = bt_rows[:, l // page_size]                      # [B, band]
+    k_hist = jnp.moveaxis(k_pages[pg, l % page_size], 1, 2)
+    v_hist = jnp.moveaxis(v_pages[pg, l % page_size], 1, 2)
+    return fusemax_attention(
+        q, jnp.concatenate([k_hist, k_new], axis=2),
+        jnp.concatenate([v_hist, v_new], axis=2),
+        causal=cfg.causal, window=w, softcap=cfg.attn_softcap,
+        q_offset=off - klo,
+        impl=rt.attn_impl, block_q=rt.block_q, block_k=rt.block_k,
+        exp_impl=rt.exp_impl, interpret=rt.interpret,
+        unroll_scan=rt.unroll_runs,
+    )
+
+
 def gqa_prefill_paged(
     p, x: jnp.ndarray, cache: dict, bt_rows: jnp.ndarray, off: int,
     cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
@@ -316,7 +395,12 @@ def gqa_prefill_paged(
     from the prefix index and must be read but never rewritten, so their
     writes are dropped too.  Outputs are bit-identical to the dense
     prefill path — the attention inputs are the same arrays, only the
-    K/V residency differs."""
+    K/V residency differs.
+
+    With ``rt.kv_shard`` the whole attend+write body runs under
+    ``shard_map``: each device handles its kv-head slice of the pool and
+    the head outputs are all-gathered before the (replicated) output
+    projection — see the module docstring."""
     b, s_len, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(off, off + s_len), (b, s_len))
     cap = _gqa_capacity(cache, bt_rows, spec)
@@ -325,51 +409,42 @@ def gqa_prefill_paged(
     valid = (pos < tl) & (pos >= jnp.minimum(tl, off + s_len) - cap)
     if cached_len is not None:
         valid = valid & (positions >= cached_len[:, None])
+    valid = jnp.broadcast_to(valid, positions.shape)
+
+    shard = rt.kv_shard
+    if shard is not None:
+        q, k_new, v_new = _proj_qkv(p, x, cfg, positions, rt)
+
+        def local(kp, vp, q_l, kn_l, vn_l, bt, pos_b, val):
+            out = _gqa_paged_attend(q_l, kn_l, vn_l, kp, vp, bt, off, cap,
+                                    cfg, spec, rt)
+            kp = write_pages(kp, bt, pos_b, jnp.moveaxis(kn_l, 1, 2), cap,
+                             val)
+            vp = write_pages(vp, bt, pos_b, jnp.moveaxis(vn_l, 1, 2), cap,
+                             val)
+            out = jax.lax.all_gather(out, shard.axis, axis=1, tiled=True)
+            return out, kp, vp
+
+        pspec = shard.spec(4, -2)                        # pages: Hkv axis
+        hspec = shard.spec(4, 1)                         # [B, H*, S, E]
+        rep = shard.replicated
+        out, k_pages, v_pages = shard_map_fn()(
+            local, mesh=shard.mesh,
+            in_specs=(pspec, pspec, hspec, hspec, hspec, rep, rep, rep),
+            out_specs=(rep, pspec, pspec),
+        )(cache["k_pages"], cache["v_pages"], q, k_new, v_new, bt_rows,
+          positions, valid)
+        y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
+        return y, {"k_pages": k_pages, "v_pages": v_pages}
 
     if off == 0:
         y = gqa_forward(p, x, cfg, spec, rt)
         _, k_new, v_new = _proj_qkv(p, x, cfg, positions, rt)
-    elif spec.window is None:
-        q, k_new, v_new = _proj_qkv(p, x, cfg, positions, rt)
-        # gather only the pages the prefix occupies (off is static)
-        hp = -(-off // cache["k_pages"].shape[1])
-        k_hist = jnp.moveaxis(
-            gather_pages(cache["k_pages"], bt_rows[:, :hp]), 2, 1)[:, :, :off]
-        v_hist = jnp.moveaxis(
-            gather_pages(cache["v_pages"], bt_rows[:, :hp]), 2, 1)[:, :, :off]
-        # chunk K/V rounded to the cache dtype first — the dense path reads
-        # them back out of the cache it just wrote
-        out = fusemax_attention(
-            q, jnp.concatenate([k_hist, k_new.astype(k_hist.dtype)], axis=2),
-            jnp.concatenate([v_hist, v_new.astype(v_hist.dtype)], axis=2),
-            causal=cfg.causal, softcap=cfg.attn_softcap, q_offset=off,
-            impl=rt.attn_impl, block_q=rt.block_q, block_k=rt.block_k,
-            exp_impl=rt.exp_impl, interpret=rt.interpret,
-            unroll_scan=rt.unroll_runs,
-        )
-        y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
     else:
-        # ring continuation: gather the still-needed history band from the
-        # ring pages before this chunk's writes land
-        w = spec.window
         q, k_new, v_new = _proj_qkv(p, x, cfg, positions, rt)
-        klo = max(0, off - w + 1)
-        l = jnp.arange(klo, off) % cap
-        page_size = cache["k_pages"].shape[1]
-        pg = bt_rows[:, l // page_size]                  # [B, band]
-        k_hist = jnp.moveaxis(
-            cache["k_pages"][pg, l % page_size], 1, 2)
-        v_hist = jnp.moveaxis(
-            cache["v_pages"][pg, l % page_size], 1, 2)
-        out = fusemax_attention(
-            q, jnp.concatenate([k_hist, k_new], axis=2),
-            jnp.concatenate([v_hist, v_new], axis=2),
-            causal=cfg.causal, window=w, softcap=cfg.attn_softcap,
-            q_offset=off - klo,
-            impl=rt.attn_impl, block_q=rt.block_q, block_k=rt.block_k,
-            exp_impl=rt.exp_impl, interpret=rt.interpret,
-            unroll_scan=rt.unroll_runs,
-        )
+        out = _gqa_paged_attend(q, k_new, v_new, cache["k_pages"],
+                                cache["v_pages"], bt_rows, off, cap, cfg,
+                                spec, rt)
         y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
 
     k_pages = write_pages(cache["k_pages"], bt_rows, positions,
@@ -386,15 +461,16 @@ def gqa_decode_paged(
     """One-token decode against the page pool: write the new K/V at the
     logical tail (ring-wrapped for local layers), read through the block
     table.  Inactive slots (kv_len == 0) drop their writes — their table
-    rows may hold the sentinel page."""
+    rows may hold the sentinel page.
+
+    With ``rt.kv_shard`` the write + split-K decode run head-parallel
+    under ``shard_map`` (each device decodes its kv-head slice of the
+    pool against the full, replicated block table), and head outputs are
+    all-gathered before the replicated output projection."""
     pos = (kv_len - 1)[:, None]                          # [B, 1]
     q, k_new, v_new = _proj_qkv(p, x, cfg, pos, rt)      # [B, H*, 1, dh]
     cap = _gqa_capacity(cache, bt_rows, spec)
     valid = (kv_len > 0)[:, None]
-    k_pages = write_pages(cache["k_pages"], bt_rows, pos,
-                          jnp.moveaxis(k_new, 1, 2), cap, valid)
-    v_pages = write_pages(cache["v_pages"], bt_rows, pos,
-                          jnp.moveaxis(v_new, 1, 2), cap, valid)
 
     if spec.window is not None:
         eff_len = jnp.minimum(kv_len, cap)               # ring: all in-window
@@ -402,6 +478,40 @@ def gqa_decode_paged(
     else:
         eff_len = kv_len
         capacity = None
+
+    shard = rt.kv_shard
+    if shard is not None:
+        def local(kp, vp, q_l, kn_l, vn_l, bt, pos_b, val, el):
+            kp = write_pages(kp, bt, pos_b, jnp.moveaxis(kn_l, 1, 2), cap,
+                             val)
+            vp = write_pages(vp, bt, pos_b, jnp.moveaxis(vn_l, 1, 2), cap,
+                             val)
+            out = fusemax_decode_paged(
+                q_l, kp, vp, bt, el,
+                capacity=capacity, softcap=cfg.attn_softcap,
+                impl=rt.attn_impl, splits=rt.decode_splits,
+                exp_impl=rt.exp_impl, interpret=rt.interpret,
+            )
+            out = jax.lax.all_gather(out, shard.axis, axis=1, tiled=True)
+            return out, kp, vp
+
+        pspec = shard.spec(4, -2)
+        hspec = shard.spec(4, 1)
+        rep = shard.replicated
+        out, k_pages, v_pages = shard_map_fn()(
+            local, mesh=shard.mesh,
+            in_specs=(pspec, pspec, hspec, hspec, hspec, rep, rep, rep,
+                      rep),
+            out_specs=(rep, pspec, pspec),
+        )(cache["k_pages"], cache["v_pages"], q, k_new, v_new, bt_rows,
+          pos, valid, eff_len)
+        y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
+        return y, {"k_pages": k_pages, "v_pages": v_pages}
+
+    k_pages = write_pages(cache["k_pages"], bt_rows, pos,
+                          jnp.moveaxis(k_new, 1, 2), cap, valid)
+    v_pages = write_pages(cache["v_pages"], bt_rows, pos,
+                          jnp.moveaxis(v_new, 1, 2), cap, valid)
     out = fusemax_decode_paged(
         q, k_pages, v_pages, bt_rows, eff_len,
         capacity=capacity,
@@ -624,7 +734,13 @@ def mla_prefill_paged(
     chunk's queries attend the full cached prefix gathered through the
     block-table rows (expanded per-head, mirroring
     :func:`mla_prefill_chunk`).  ``cached_len`` masks writes below each
-    row's shared-prefix extent (see :func:`gqa_prefill_paged`)."""
+    row's shared-prefix extent (see :func:`gqa_prefill_paged`).
+
+    With ``rt.kv_shard`` the latent pages are partitioned along the rank
+    axis: each device writes its rank-slice, and the history view is
+    all-gathered back to the full rank *inside* the mapped region so the
+    per-head expansion and attention run replicated — storage shards,
+    compute does not (the known MLA paged limitation)."""
     m = cfg.mla
     b, s_len, _ = x.shape
     dt = x.dtype
@@ -635,20 +751,49 @@ def mla_prefill_paged(
     valid = positions[:1] < true_len[:, None]
     if cached_len is not None:
         valid = valid & (positions >= cached_len[:, None])
-    ckv_pages = write_pages(cache["ckv_pages"], bt_rows, positions,
-                            ckv_new, cap, valid)
-    krope_pages = write_pages(cache["krope_pages"], bt_rows, positions,
-                              krope_new, cap, valid)
-
-    if off == 0:
-        y = mla_forward(p, x, cfg, spec, rt)
-        return y, {"ckv_pages": ckv_pages, "krope_pages": krope_pages}
-
+    valid = jnp.broadcast_to(valid, positions.shape)
     tot = off + s_len
     # gather only the pages the prefix + chunk occupy (tot is static)
     hp = -(-tot // cache["ckv_pages"].shape[1])
-    ckv = gather_pages(ckv_pages, bt_rows[:, :hp])[:, :tot]
-    krope = gather_pages(krope_pages, bt_rows[:, :hp])[:, :tot]
+
+    shard = rt.kv_shard
+    if shard is not None:
+        def local(cp, krp, cn_l, kn_l, bt, pos_b, val):
+            cp = write_pages(cp, bt, pos_b, cn_l, cap, val)
+            krp = write_pages(krp, bt, pos_b, kn_l, cap, val)
+            if off == 0:
+                return cp, krp
+            ckv_l = gather_pages(cp, bt[:, :hp])[:, :tot]
+            kr_l = gather_pages(krp, bt[:, :hp])[:, :tot]
+            ckv = jax.lax.all_gather(ckv_l, shard.axis, axis=2, tiled=True)
+            kr = jax.lax.all_gather(kr_l, shard.axis, axis=2, tiled=True)
+            return cp, krp, ckv, kr
+
+        pspec = shard.spec(3, -1)                        # rank axis
+        rep = shard.replicated
+        outs = ((pspec, pspec) if off == 0
+                else (pspec, pspec, rep, rep))
+        got = shard_map_fn()(
+            local, mesh=shard.mesh,
+            in_specs=(pspec, pspec, pspec, pspec, rep, rep, rep),
+            out_specs=outs,
+        )(cache["ckv_pages"], cache["krope_pages"], ckv_new, krope_new,
+          bt_rows, positions, valid)
+        if off == 0:
+            ckv_pages, krope_pages = got
+            y = mla_forward(p, x, cfg, spec, rt)
+            return y, {"ckv_pages": ckv_pages, "krope_pages": krope_pages}
+        ckv_pages, krope_pages, ckv, krope = got
+    else:
+        ckv_pages = write_pages(cache["ckv_pages"], bt_rows, positions,
+                                ckv_new, cap, valid)
+        krope_pages = write_pages(cache["krope_pages"], bt_rows, positions,
+                                  krope_new, cap, valid)
+        if off == 0:
+            y = mla_forward(p, x, cfg, spec, rt)
+            return y, {"ckv_pages": ckv_pages, "krope_pages": krope_pages}
+        ckv = gather_pages(ckv_pages, bt_rows[:, :hp])[:, :tot]
+        krope = gather_pages(krope_pages, bt_rows[:, :hp])[:, :tot]
     h = cfg.n_heads
     k_nope = jnp.einsum("bsr,rhe->bhse", ckv, p["w_uk"].astype(dt))
     v = jnp.einsum("bsr,rhe->bhse", ckv, p["w_uv"].astype(dt))
@@ -675,20 +820,45 @@ def mla_decode_paged(
     kv_len: jnp.ndarray, cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
 ) -> tuple[jnp.ndarray, dict]:
     """Absorbed-form decode against paged latents: write the new latent at
-    the logical tail, gather the table view, score in latent space."""
+    the logical tail, gather the table view, score in latent space.
+
+    With ``rt.kv_shard`` each device writes its rank-slice of the latent
+    pages and the gathered table view is all-gathered back to the full
+    rank — the per-step gather the unsharded path already pays, now
+    sourced from a pool whose per-device bytes are 1/tp of the total."""
     m = cfg.mla
     dt = x.dtype
     pos = (kv_len - 1)[:, None]
     q_nope, q_rope, ckv_new, krope_new = _mla_qkv_latent(p, x, cfg, pos)
     cap = bt_rows.shape[1] * cache["ckv_pages"].shape[1]
     valid = (kv_len > 0)[:, None]
-    ckv_pages = write_pages(cache["ckv_pages"], bt_rows, pos, ckv_new,
-                            cap, valid)
-    krope_pages = write_pages(cache["krope_pages"], bt_rows, pos,
-                              krope_new, cap, valid)
 
-    ckv = gather_pages(ckv_pages, bt_rows)               # [B, T, r]
-    krope = gather_pages(krope_pages, bt_rows)
+    shard = rt.kv_shard
+    if shard is not None:
+        def local(cp, krp, cn_l, kn_l, bt, pos_b, val):
+            cp = write_pages(cp, bt, pos_b, cn_l, cap, val)
+            krp = write_pages(krp, bt, pos_b, kn_l, cap, val)
+            ckv_l = gather_pages(cp, bt)
+            kr_l = gather_pages(krp, bt)
+            ckv = jax.lax.all_gather(ckv_l, shard.axis, axis=2, tiled=True)
+            kr = jax.lax.all_gather(kr_l, shard.axis, axis=2, tiled=True)
+            return cp, krp, ckv, kr
+
+        pspec = shard.spec(3, -1)
+        rep = shard.replicated
+        ckv_pages, krope_pages, ckv, krope = shard_map_fn()(
+            local, mesh=shard.mesh,
+            in_specs=(pspec, pspec, pspec, pspec, rep, rep, rep),
+            out_specs=(pspec, pspec, rep, rep),
+        )(cache["ckv_pages"], cache["krope_pages"], ckv_new, krope_new,
+          bt_rows, pos, valid)
+    else:
+        ckv_pages = write_pages(cache["ckv_pages"], bt_rows, pos, ckv_new,
+                                cap, valid)
+        krope_pages = write_pages(cache["krope_pages"], bt_rows, pos,
+                                  krope_new, cap, valid)
+        ckv = gather_pages(ckv_pages, bt_rows)           # [B, T, r]
+        krope = gather_pages(krope_pages, bt_rows)
     q_eff = jnp.einsum("bhse,rhe->bhsr", q_nope, p["w_uk"].astype(dt))
     q_cat = jnp.concatenate([q_eff, q_rope], axis=-1)    # [B,H,1,r+rd]
     k_cat = jnp.concatenate([ckv, krope], axis=-1)[:, None]

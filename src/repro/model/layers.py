@@ -53,6 +53,11 @@ class Runtime:
     # activation-sharding hook installed by the distributed layer; takes
     # (x, logical_axes) and returns x (identity by default).
     shard_activation: Callable = staticmethod(lambda x, axes: x)
+    #: paged-pool device sharding (repro.distributed.sharding.KVShard):
+    #: page arrays split along the kv-head / latent-rank axis and the
+    #: paged attention ops run under shard_map.  None → single-device
+    #: pool (every non-paged path ignores this).
+    kv_shard: Optional[Any] = None
 
 
 def _init(key, shape, scale, dtype):

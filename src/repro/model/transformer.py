@@ -382,7 +382,15 @@ def init_paged_cache(cfg: ModelConfig, slots: int, num_pages: dict,
     unchanged.  Every layer owns its own page storage; the block tables
     (one per capacity class, shared by all layers of the class) are managed
     host-side by :class:`repro.serving.kv_cache.PagedKVCache` and passed
-    per dispatch."""
+    per dispatch.
+
+    Device sharding note: arrays are created unplaced; ``PagedKVCache``
+    device_puts them with ``sharding.paged_cache_shardings`` when the
+    pool is mesh-sharded (head/rank axis split, page axis complete per
+    device) — the tree shape here is what that sharding walk keys on
+    (leaf names ``k_pages``/``v_pages``/``ckv_pages``/``krope_pages``),
+    and the per-shard write masks live in the attention layer's
+    ``shard_map`` paths, not here."""
     caches = []
     for pattern, reps in cfg.runs():
         pos = []

@@ -62,6 +62,16 @@ replays the exact per-step sampling/advance order.
 ``make_serve_step`` / ``make_prefill_step`` / ``make_decode_loop`` build
 the jit-able functions the launcher binds to a mesh (these are what the
 dry-run lowers).
+
+Device-sharded pool (``mesh=``): with a multi-device mesh the paged
+layout's page arrays shard along the kv-head / latent-rank axis over
+``shard_axis`` (default "model") — per-device cache bytes drop to
+total/tp while the host-side scheduler (admission, growth, preemption,
+COW, prefix index) is untouched, because page ids stay global.  Params
+and per-slot state replicate; the paged attention ops run head-parallel
+under ``shard_map`` and all-gather head outputs, so greedy token streams
+stay bit-identical to the single-device paged engine (the three-way
+dense/paged/paged+prefix equality extends to a four-way check).
 """
 from __future__ import annotations
 
@@ -72,8 +82,10 @@ from typing import Any, Callable, Iterable, Optional, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
 from repro.kernels.autotune import next_pow2
 from repro.model import transformer as tf
 from repro.model.layers import Runtime
@@ -178,9 +190,29 @@ class ServeEngine:
                  cache_layout: str = "dense",
                  page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 prefix_caching: bool = True):
+                 prefix_caching: bool = True,
+                 mesh=None, shard_axis: str = "model"):
         if cache_layout not in ("dense", "paged"):
             raise ValueError(f"unknown cache_layout: {cache_layout!r}")
+        shard = None
+        if mesh is not None and shard_axis not in mesh.axis_names:
+            raise ValueError(
+                f"mesh axes {tuple(mesh.axis_names)} have no "
+                f"{shard_axis!r} axis to shard the paged pool over — "
+                f"pass shard_axis= or build the mesh with a "
+                f"{shard_axis!r} axis")
+        if mesh is not None and int(mesh.shape[shard_axis]) > 1:
+            if cache_layout != "paged":
+                raise ValueError(
+                    "pool sharding (mesh=) requires cache_layout='paged' — "
+                    "the dense layout reserves worst-case rows per slot "
+                    "and is not device-sharded")
+            shd.validate_kv_shard(cfg, int(mesh.shape[shard_axis]))
+            shard = shd.KVShard(mesh=mesh, axis=shard_axis)
+            # page pools shard; params and per-step state replicate so
+            # every non-paged op stays bit-identical to the 1-device path
+            params = jax.device_put(params, NamedSharding(mesh, P()))
+            rt = dataclasses.replace(rt, kv_shard=shard)
         self.cfg = cfg
         self.params = params
         self.rt = rt
@@ -196,7 +228,8 @@ class ServeEngine:
             self.kv = PagedKVCache(cfg, slots, max_len, dtype,
                                    page_size=page_size,
                                    num_pages=num_pages,
-                                   prefix_caching=prefix_caching)
+                                   prefix_caching=prefix_caching,
+                                   shard=shard)
             self.caches = self.kv.caches
         else:
             self.kv = None

@@ -47,6 +47,17 @@ attention or SSM layers (their state at the prefix boundary is not
 reconstructible from retained pages) and for MoE configs (expert
 capacity depends on the prefilled chunk length).
 
+Device sharding (``shard=``, a
+:class:`repro.distributed.sharding.KVShard`): every page array is
+partitioned along its kv-head (GQA) / latent-rank (MLA) axis over one
+mesh axis while the page dimension stays complete on each device.  Page
+ids are global, so *everything host-side is replicated and unchanged* —
+free lists, block tables, the prefix index, refcounts, COW scheduling,
+sentinel semantics — and per-device resident bytes are exactly
+``total / tp``.  The sharded compute lives in the attention layer
+(``rt.kv_shard`` → ``shard_map`` head-parallel paths); this class only
+places the arrays and validates divisibility.
+
 ``PagedKVCache`` owns the device page arrays (built by
 ``transformer.init_paged_cache`` with the same run/stack tree shape as the
 dense caches, so scan/donation work unchanged), the host free lists
@@ -66,6 +77,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
 from repro.model import transformer as tf
 from repro.model.attention import paged_cache_key
 
@@ -196,7 +208,8 @@ class PagedKVCache:
     def __init__(self, cfg: ModelConfig, slots: int, max_len: int, dtype,
                  *, page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 prefix_caching: bool = True):
+                 prefix_caching: bool = True,
+                 shard: Optional[shd.KVShard] = None):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         if max_len % page_size:
@@ -207,6 +220,12 @@ class PagedKVCache:
         self.slots = slots
         self.max_len = max_len
         self.page_size = page_size
+        # device sharding of the pool along the kv-head / latent-rank axis
+        # (repro.distributed.sharding.KVShard).  Validated up front: an
+        # axis the mesh does not divide must fail loudly, never replicate.
+        self.shard = shard if shard is not None and shard.size > 1 else None
+        if self.shard is not None:
+            shd.validate_kv_shard(cfg, self.shard.size)
 
         # capacity classes present in this architecture
         caps: Dict[str, int] = {}
@@ -269,6 +288,14 @@ class PagedKVCache:
 
         self.caches = tf.init_paged_cache(cfg, slots, pool_sizes, page_size,
                                           dtype)
+        self._shardings = None
+        if self.shard is not None:
+            # pages split along the kv-head (GQA) / latent-rank (MLA) axis;
+            # the page dimension stays complete per device, so page ids —
+            # and with them every host-side structure above — are global
+            self._shardings = shd.paged_cache_shardings(self.caches,
+                                                        self.shard)
+            self.caches = jax.device_put(self.caches, self._shardings)
         self._physical_page_bytes = sum(
             c.pool.num_pages * c.bytes_per_page
             for c in self.classes.values())
@@ -533,10 +560,19 @@ class PagedKVCache:
         fn = self._cow_fns.get(key)
         if fn is None:
             donate = (0,) if jax.default_backend() != "cpu" else ()
-            fn = jax.jit(
-                lambda caches, src, dst: tf.copy_cache_pages(
-                    self.cfg, caches, key, src, dst),
-                donate_argnums=donate)
+
+            def run(caches, src, dst):
+                out = tf.copy_cache_pages(self.cfg, caches, key, src, dst)
+                if self._shardings is not None:
+                    # pin the pool's head/rank sharding through the copy —
+                    # the page-axis update is shard-local either way, but
+                    # an unconstrained output could let GSPMD replicate
+                    out = jax.tree.map(
+                        jax.lax.with_sharding_constraint, out,
+                        self._shardings)
+                return out
+
+            fn = jax.jit(run, donate_argnums=donate)
             self._cow_fns[key] = fn
         return fn
 
@@ -578,7 +614,10 @@ class PagedKVCache:
         index are reported separately — they are reclaimable on demand.
         Physical = the whole pool allocation (device arrays are static).
         SSM slot state is counted separately — it is O(slots), independent
-        of sequence length."""
+        of sequence length.  With a device-sharded pool the head/rank axis
+        of every page splits evenly over ``tp`` devices (validated at
+        construction), so per-device bytes are exactly total/tp — reported
+        under ``sharding.per_device``."""
         live = {k: self._live_pages(c) for k, c in self.classes.items()}
         resident = sum(live[k] * c.bytes_per_page
                        for k, c in self.classes.items())
@@ -588,6 +627,19 @@ class PagedKVCache:
         prefix_pages = len(self._prefix)
         prefix_only = 0 if full is None else \
             self._evictable_pages("full", full)
+        sharding = None
+        if self.shard is not None:
+            tp = self.shard.size
+            sharding = {
+                "tp": tp,
+                "axis": self.shard.axis,
+                "per_device": {
+                    "resident_cache_bytes": resident // tp,
+                    "peak_resident_cache_bytes": peak // tp,
+                    "physical_cache_bytes":
+                        self._physical_page_bytes // tp,
+                },
+            }
         return {
             "page_size": self.page_size,
             "num_pages": {k: c.pool.num_pages
@@ -602,6 +654,7 @@ class PagedKVCache:
             "peak_resident_cache_bytes": peak,
             "physical_cache_bytes": self._physical_page_bytes,
             "ssm_state_bytes": self._state_bytes,
+            "sharding": sharding,
             "prefix_cache": {
                 "enabled": self.prefix_enabled,
                 "entries": prefix_pages,
