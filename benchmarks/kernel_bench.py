@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from repro.core import AttnSpec, attention_1pass, attention_2pass, \
     attention_3pass
 from repro.kernels import attention_params, decode_params, \
-    fusemax_attention, fusemax_decode
+    fusemax_attention, fusemax_decode, fusemax_mla_decode_paged, \
+    mla_paged_decode_params
 from repro.kernels.autotune import time_fn
 
 
@@ -78,3 +79,28 @@ def ops_bench(iters: int = 7) -> list:
                  round(_time(fn, qd, k, v, kv_len, iters=iters), 1),
                  f"M={m} autotune=s{dtuned.splits}/bk{dtuned.block_k}"))
     return rows
+
+
+def mla_bench(iters: int = 7) -> list:
+    """Paged latent-space MLA decode: absorbed-form queries against latent
+    + rope page pools through a block table, one split per page (the same
+    fixed split structure the rank-sharded serving path partitions)."""
+    b, h, r, rd = 2, 16, 128, 64
+    n_pages, ps, w = 64, 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    q = jax.random.normal(ks[0], (b, h, 1, r + rd), jnp.float32)
+    ckv = jax.random.normal(ks[1], (n_pages, ps, r), jnp.float32)
+    kr = jax.random.normal(ks[2], (n_pages, ps, rd), jnp.float32)
+    bt = jnp.stack([
+        jax.random.permutation(ks[3], n_pages)[:w],
+        jax.random.permutation(ks[4], n_pages)[:w],
+    ]).astype(jnp.int32)
+    kv_len = jnp.asarray([w * ps - 5, w * ps // 2], jnp.int32)
+    tuned = mla_paged_decode_params(w, ps, max(h, 8), r, rd)
+    scale = 1.0 / (r + rd) ** 0.5
+    fn = jax.jit(lambda q, c, k2, t, l: fusemax_mla_decode_paged(
+        q, c, k2, t, l, scale=scale, impl="jnp"))
+    return [("ops/mla_decode_paged_jnp",
+             round(_time(fn, q, ckv, kr, bt, kv_len, iters=iters), 1),
+             f"H={h} r={r} rd={rd} W={w} ps={ps} "
+             f"autotune=s{tuned.splits}/bk{tuned.block_k}")]

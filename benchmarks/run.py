@@ -31,10 +31,10 @@ def main(argv=None) -> None:
             for name, value, derived in fig():
                 print(f"{name},{value},{derived}")
 
-    from benchmarks.kernel_bench import cascade_bench, ops_bench
+    from benchmarks.kernel_bench import cascade_bench, mla_bench, ops_bench
     iters = 3 if args.smoke else 7
     kernel_rows = {}
-    for bench in (cascade_bench, ops_bench):
+    for bench in (cascade_bench, ops_bench, mla_bench):
         for name, value, derived in bench(iters=iters):
             print(f"{name},{value},{derived}")
             kernel_rows[name] = {"us_per_call": value, "derived": derived}

@@ -30,6 +30,17 @@ is unchanged.  :func:`validate_kv_shard` rejects head/rank counts the
 mesh axis does not divide — an uneven split would silently replicate (the
 ``_divisible`` rule) and report wrong per-device memory, so it is an
 error instead.
+
+Compute follows storage differently per attention kind.  GQA decode is
+head-parallel: each device runs the paged kernel on its own kv-head slice
+and outputs all-gather on the head axis.  MLA decode cannot split on its
+storage axis (every absorbed-form score contracts the full latent rank),
+so under ``shard_map`` it parallelizes *split-K* instead: the sweep is
+fixed at one split per block-table page, each device computes the
+(RM, RD, RNV) partials for a contiguous 1/tp strip of pages, and the
+page-ordered partial stacks all-gather before a replicated associative
+combine (see ``repro.model.attention.mla_decode_paged``) — per-device
+decode FLOPs are 1/tp with streams bit-identical to the unsharded sweep.
 """
 from __future__ import annotations
 

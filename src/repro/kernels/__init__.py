@@ -10,14 +10,17 @@
 from repro.kernels import autotune
 from repro.kernels.autotune import (
     AttentionParams, DecodeParams, attention_params, decode_params,
-    measure_best, paged_decode_params,
+    measure_best, mla_paged_decode_params, paged_decode_params,
 )
 from repro.kernels.fusemax import exp_maccs, fusemax_attention_pallas
 from repro.kernels.decode import (
     fusemax_decode_paged_pallas, fusemax_decode_pallas,
+    fusemax_mla_decode_paged_pallas,
 )
 from repro.kernels.ops import (
-    fusemax_attention, fusemax_decode, fusemax_decode_paged, gather_pages,
+    fusemax_attention, fusemax_decode, fusemax_decode_paged,
+    fusemax_mla_decode_paged, gather_pages, mla_combine_partials,
+    mla_decode_partials,
 )
 from repro.kernels.ref import decode_reference, mha_reference
 
@@ -31,6 +34,9 @@ __all__ = [
     "exp_maccs",
     "gather_pages",
     "measure_best",
+    "mla_combine_partials",
+    "mla_decode_partials",
+    "mla_paged_decode_params",
     "paged_decode_params",
     "fusemax_attention",
     "fusemax_attention_pallas",
@@ -38,5 +44,7 @@ __all__ = [
     "fusemax_decode_paged",
     "fusemax_decode_paged_pallas",
     "fusemax_decode_pallas",
+    "fusemax_mla_decode_paged",
+    "fusemax_mla_decode_paged_pallas",
     "mha_reference",
 ]

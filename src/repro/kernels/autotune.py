@@ -234,6 +234,30 @@ def paged_decode_params(n_pages: int, page_size: int, g: int, e: int, f: int,
     return best
 
 
+def mla_paged_decode_params(n_pages: int, page_size: int, g: int,
+                            rank: int, rope_dim: int, *,
+                            backend: str = "cpu",
+                            impl: str = "jnp") -> DecodeParams:
+    """Pick (splits, block_k) for the paged *latent-space* MLA decode
+    kernel: the K stream is the concatenated (rank + rope_dim) latent page
+    pair and the V stream is the rank-wide latent itself, so the cost model
+    runs with e = rank + rope_dim, f = rank over the same page-aligned
+    candidate set as :func:`paged_decode_params` (splits divide the table
+    width, block_k divides page_size)."""
+    _load_disk_cache()
+    key = ("mla-pdecode", backend, impl, str(n_pages), str(page_size),
+           str(_bucket(g)), str(rank), str(rope_dim))
+    hit = _TABLE.get(key)
+    if hit is not None:
+        return DecodeParams(int(hit[0]), int(hit[1]))
+    m = n_pages * page_size
+    cands = _paged_decode_candidates(n_pages, page_size)
+    best = min(cands,
+               key=lambda c: _decode_cost(c, m, g, rank + rope_dim, rank))
+    _TABLE[key] = (best.splits, best.block_k)
+    return best
+
+
 def decode_params(m: int, g: int, e: int, f: int, *,
                   backend: str = "cpu",
                   impl: str = "jnp") -> DecodeParams:

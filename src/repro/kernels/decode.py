@@ -28,6 +28,20 @@ communication, which is what lets the serving tier run them on kv-head
 ``repro.model.attention``): a shard's ``hkv`` is just a smaller fiber
 count, the block table and page ids are global, and per-fiber results
 match the full-pool run bit-for-bit.
+
+The MLA variant (``fusemax_mla_decode_paged_pallas``) runs the same sweep
+in *latent space*: the page pool stores compressed latents
+``ckv [P, ps, r]`` + positional keys ``krope [P, ps, rope_dim]`` (Hkv = 1,
+group = every q head), scores are the absorbed form
+``q_nopeᵀW_uk·ckv + q_ropeᵀ·krope`` (two dots against the two page
+streams, summed), and the accumulator is the latent ``Σ a·ckv`` — no
+per-head K/V is ever materialized.  MLA pools shard on the *rank* axis,
+which every score contracts over, so the serving tier parallelizes MLA
+decode differently: each device sweeps a contiguous 1/tp strip of the
+block table's pages (one split per page), all-gathers the page-ordered
+(RM, RD, RNV) partial stacks, and runs the identical associative combine
+replicated — per-device FLOPs are 1/tp while the combined output stays
+bit-identical to the single-device sweep.
 """
 from __future__ import annotations
 
@@ -378,5 +392,182 @@ def fusemax_decode_paged_pallas(
         interpret=interpret,
     )(kv_len.astype(jnp.int32), block_table.astype(jnp.int32),
       q, k_pages, v_pages)
+
+    return _combine_partials(pm, pl_, pnv, q.dtype)
+
+
+def _mla_paged_decode_partials_kernel(
+    kv_len_ref,                     # SMEM scalar-prefetch: [B] int32
+    bt_ref,                         # SMEM scalar-prefetch: [B, W] int32
+    q_ref, ckv_ref, krope_ref,
+    pm_ref, pl_ref, pnv_ref,        # partial outputs per (b, s)
+    m_scratch, l_scratch, acc_scratch,
+    *,
+    scale: float,
+    softcap: Optional[float],
+    rank: int,
+    block_k: int,
+    m2_total: int,
+    split_len: int,
+    exp_impl: str,
+):
+    """Latent-space (MLA absorbed-form) variant of
+    :func:`_paged_decode_partials_kernel`.  The query tile carries the
+    W_uk-absorbed queries concatenated with the rope queries
+    ``[G, rank + rope_dim]``; the score against a latent page tile is the
+    sum of two dots (latent and rope halves) and the value stream IS the
+    latent tile — the accumulator lives in rank-space."""
+    b = pl.program_id(0)
+    s = pl.program_id(1)
+    m2 = pl.program_id(2)
+
+    kv_len = kv_len_ref[b]                   # valid logical prefix
+
+    @pl.when(m2 == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    k_lo = s * split_len + m2 * block_k      # logical token index
+
+    @pl.when(k_lo < kv_len)
+    def _body():
+        q_tile = q_ref[0].astype(jnp.float32)            # [G, r + rope]
+        ckv_tile = ckv_ref[0].astype(jnp.float32)        # [block_k, r]
+        kr_tile = krope_ref[0].astype(jnp.float32)       # [block_k, rope]
+
+        sc = jax.lax.dot_general(
+            q_tile[:, :rank], ckv_tile, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) + jax.lax.dot_general(
+            q_tile[:, rank:], kr_tile, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        sc = sc * scale                                  # [G, block_k]
+        if softcap is not None:
+            sc = softcap * jnp.tanh(sc / softcap)
+
+        cols = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+        ok = (k_lo + cols) < kv_len                      # ragged mask
+        sc = jnp.where(ok, sc, NEG_INF)
+
+        m_prev = m_scratch[:, :1]
+        lm = jnp.max(sc, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, lm)
+        p = _exp(sc - m_new, exp_impl)
+        sld = jnp.sum(p, axis=1, keepdims=True)
+        prm = _exp(m_prev - m_new, exp_impl)
+        l_scratch[...] = jnp.broadcast_to(
+            l_scratch[:, :1] * prm + sld, l_scratch.shape)
+        acc_scratch[...] = acc_scratch[...] * prm + jax.lax.dot_general(
+            p, ckv_tile, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scratch[...] = jnp.broadcast_to(m_new, m_scratch.shape)
+
+    @pl.when(m2 == m2_total - 1)
+    def _finish():
+        pm_ref[0, 0] = m_scratch[...].astype(pm_ref.dtype)
+        pl_ref[0, 0] = l_scratch[...].astype(pl_ref.dtype)
+        pnv_ref[0, 0] = acc_scratch[...].astype(pnv_ref.dtype)
+
+
+def fusemax_mla_decode_paged_pallas(
+    q: jnp.ndarray,             # [B, G, rank + rope_dim]  (G padded ≥ 8)
+    ckv_pages: jnp.ndarray,     # [P, page_size, rank]
+    krope_pages: jnp.ndarray,   # [P, page_size, rope_dim]
+    block_table: jnp.ndarray,   # [B, W] int32 page ids
+    kv_len: jnp.ndarray,        # [B] int32 valid logical lengths
+    *,
+    scale: float,
+    softcap: Optional[float] = None,
+    splits: int = 1,
+    block_k: int = 128,
+    exp_impl: str = "native",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Paged split-K MLA decode in latent space. Returns [B, G, rank]
+    (q.dtype) — the latent output, before the W_uv up-projection.
+
+    Same structure as :func:`fusemax_decode_paged_pallas` with Hkv = 1 and
+    two page streams whose ``index_map``s resolve the same block-table
+    slot: the latent pages double as the V stream (F = rank), so per-step
+    decode DMAs exactly the slot's pages and nothing else.
+    """
+    b, g, e = q.shape
+    n_pages, page_size, rank = ckv_pages.shape
+    rope_dim = krope_pages.shape[-1]
+    bt_b, w = block_table.shape
+    if e != rank + rope_dim:
+        raise ValueError(f"q last dim {e} != rank {rank} + rope {rope_dim}")
+    if bt_b != b:
+        raise ValueError(f"q batch {b} != block table rows {bt_b}")
+    if w % splits:
+        raise ValueError(f"table width {w} not divisible by splits={splits}")
+    block_k = min(block_k, page_size)
+    if page_size % block_k:
+        raise ValueError(f"page_size={page_size} % block_k={block_k}")
+    split_pages = w // splits
+    split_len = split_pages * page_size
+    blocks_per_page = page_size // block_k
+    m2 = split_pages * blocks_per_page
+    grid = (b, splits, m2)
+
+    kernel = functools.partial(
+        _mla_paged_decode_partials_kernel,
+        scale=scale,
+        softcap=softcap,
+        rank=rank,
+        block_k=block_k,
+        m2_total=m2,
+        split_len=split_len,
+        exp_impl=exp_impl,
+    )
+
+    def _page_index(b_i, s, m2_i, kv_len_ref, bt_ref):
+        page_slot = s * split_pages + m2_i // blocks_per_page
+        # sentinel ids (P) on unbacked slots clamp to the last page; the
+        # kv_len mask in the body keeps their content out of the cascade
+        page = jnp.minimum(bt_ref[b_i, page_slot], n_pages - 1)
+        return (page, m2_i % blocks_per_page, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, e), lambda b_i, s, m2_i, *_: (b_i, 0, 0)),
+            pl.BlockSpec((1, block_k, rank), _page_index),
+            pl.BlockSpec((1, block_k, rope_dim), _page_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, LANES),
+                         lambda b_i, s, m2_i, *_: (b_i, s, 0, 0)),
+            pl.BlockSpec((1, 1, g, LANES),
+                         lambda b_i, s, m2_i, *_: (b_i, s, 0, 0)),
+            pl.BlockSpec((1, 1, g, rank),
+                         lambda b_i, s, m2_i, *_: (b_i, s, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, LANES), jnp.float32),
+            pltpu.VMEM((g, LANES), jnp.float32),
+            pltpu.VMEM((g, rank), jnp.float32),
+        ],
+    )
+
+    pm, pl_, pnv = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, splits, g, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((b, splits, g, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((b, splits, g, rank), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), block_table.astype(jnp.int32),
+      q, ckv_pages, krope_pages)
 
     return _combine_partials(pm, pl_, pnv, q.dtype)

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from repro.kernels import autotune, ref as _ref
 from repro.kernels.decode import (
     fusemax_decode_paged_pallas, fusemax_decode_pallas,
+    fusemax_mla_decode_paged_pallas,
 )
 from repro.kernels.fusemax import NEG_INF, fusemax_attention_pallas
 
@@ -487,6 +488,150 @@ def fusemax_decode_paged(
         block_k=block_k, exp_impl=exp_impl, interpret=interpret,
     )
     return _unfold_decode_out(out, b, hkv, group, f)
+
+
+def mla_decode_partials(
+    q_cat: jnp.ndarray,     # [B, H, 1, rank + rope_dim] absorbed + rope q
+    ckv: jnp.ndarray,       # [B, T, rank] latent history (gathered view)
+    krope: jnp.ndarray,     # [B, T, rope_dim] positional-key history
+    kv_len: jnp.ndarray,    # [B] valid logical lengths
+    *,
+    start_page,             # int or traced int32: first page of this sweep
+    n_splits: int,
+    page_size: int,
+    scale: float,
+    softcap: Optional[float] = None,
+):
+    """Per-page split-K partials of the absorbed-form MLA decode cascade.
+
+    One split per block-table page: split ``j`` covers logical tokens
+    ``[(start_page+j)·ps, (start_page+j+1)·ps)`` and yields the local
+    running state (RM, RD, RNV) of Eqs. 48-52 — ``([B, n, H], [B, n, H],
+    [B, n, H, rank])``.  Every split is an identically-shaped pair of
+    GEMMs, so a rank-sharded pool can hand each device a contiguous
+    ``start_page`` strip (``start_page`` may be a traced
+    ``axis_index``-derived offset), all-gather the page-ordered stacks,
+    and recover the single-device result bit-for-bit in
+    :func:`mla_combine_partials`.
+
+    An all-masked (dead) split degrades exactly like the dense split-K
+    path: RM = -inf, RD = page_size — its combine weight exp(-inf - gm)
+    is zero, so it never contributes.
+    """
+    q3 = q_cat[:, :, 0].astype(jnp.float32)                 # [B, H, r+rd]
+    k3 = jnp.concatenate([ckv, krope], axis=-1).astype(jnp.float32)
+    v3 = ckv.astype(jnp.float32)
+    pms, pls, pnvs = [], [], []
+    for j in range(n_splits):
+        lo = (start_page + j) * page_size
+        kt = jax.lax.dynamic_slice_in_dim(k3, lo, page_size, axis=1)
+        vt = jax.lax.dynamic_slice_in_dim(v3, lo, page_size, axis=1)
+        logits = jnp.einsum("bhe,bme->bhm", q3, kt) * scale
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        kpos = lo + jnp.arange(page_size)[None, None]
+        ok = kpos < kv_len[:, None, None]
+        logits = jnp.where(ok, logits, NEG_INF)
+        lm = jnp.max(logits, axis=-1)                       # [B, H]
+        sln = jnp.exp(logits - lm[..., None])
+        pms.append(lm)
+        pls.append(jnp.sum(sln, axis=-1))
+        pnvs.append(jnp.einsum("bhm,bmf->bhf", sln, vt))
+    return jnp.stack(pms, 1), jnp.stack(pls, 1), jnp.stack(pnvs, 1)
+
+
+def mla_combine_partials(pm, pl_, pnv, dtype) -> jnp.ndarray:
+    """Combine :func:`mla_decode_partials` stacks (associative running-max
+    algebra, Eqs. 48-52) → the latent decode output [B, H, 1, rank]."""
+    gm = jnp.max(pm, axis=1, keepdims=True)
+    cf = jnp.exp(pm - gm)                                   # [B, S, H]
+    rd = jnp.sum(pl_ * cf, axis=1)                          # [B, H]
+    rnv = jnp.sum(pnv * cf[..., None], axis=1)              # [B, H, rank]
+    rd = jnp.where(rd == 0.0, 1.0, rd)
+    return (rnv / rd[..., None])[:, :, None].astype(dtype)
+
+
+def fusemax_mla_decode_paged(
+    q: jnp.ndarray,             # [B, H, 1, rank + rope_dim] absorbed q_cat
+    ckv_pages: jnp.ndarray,     # [P, page_size, rank]
+    krope_pages: jnp.ndarray,   # [P, page_size, rope_dim]
+    block_table: jnp.ndarray,   # [B, W] int32 page ids
+    kv_len: jnp.ndarray,        # [B] valid logical lengths
+    *,
+    scale: Optional[float] = None,
+    softcap: Optional[float] = None,
+    impl: str = "auto",
+    splits: Optional[int] = None,
+    block_k: Optional[int] = None,
+    exp_impl: str = "native",
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Single-token MLA decode against a paged *latent* cache.
+
+    Queries arrive W_uk-absorbed (``q_eff = q_nopeᵀW_uk`` concatenated
+    with ``q_rope``); the result is the latent output [B, H, 1, rank],
+    still to be lifted through W_uv by the caller — per-head K/V never
+    exists on either path.
+
+    impl="pallas" runs the true paged kernel (block-table lookup in the
+    ``index_map``; autotuned page-aligned tiling).  impl="jnp" gathers the
+    table view and sweeps one split per page with
+    :func:`mla_decode_partials` — the same fixed, geometry-determined
+    split structure the rank-sharded ``shard_map`` path partitions across
+    devices, so unsharded and sharded streams match bit-for-bit
+    (``splits``/``block_k`` are ignored on this path).  impl="ref"
+    delegates to the 3-pass oracle over the gathered view.
+    """
+    b, hq, p, e = q.shape
+    n_pages, page_size, rank = ckv_pages.shape
+    rope_dim = krope_pages.shape[-1]
+    w = block_table.shape[1]
+    if p != 1:
+        raise ValueError("decode expects exactly one query token")
+    if e != rank + rope_dim:
+        raise ValueError(f"q last dim {e} != rank {rank} + rope {rope_dim}")
+    scale = scale if scale is not None else 1.0 / (e ** 0.5)
+
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+
+    if impl in ("jnp", "ref"):
+        ckv = gather_pages(ckv_pages, block_table)          # [B, W·ps, r]
+        kr = gather_pages(krope_pages, block_table)
+        if impl == "ref":
+            k = jnp.concatenate([ckv, kr], axis=-1)[:, None]
+            v = ckv[:, None]
+            return fusemax_decode(
+                q, k, v, kv_len, softcap=softcap, scale=scale, impl="ref")
+        pm, pl_, pnv = mla_decode_partials(
+            q, ckv, kr, kv_len, start_page=0, n_splits=w,
+            page_size=page_size, scale=scale, softcap=softcap)
+        return mla_combine_partials(pm, pl_, pnv, q.dtype)
+
+    if impl != "pallas":
+        raise ValueError(f"unknown impl: {impl}")
+
+    if splits is None or block_k is None:
+        tuned = autotune.mla_paged_decode_params(
+            w, page_size, max(hq, 8), rank, rope_dim,
+            backend=jax.default_backend(), impl=impl)
+        splits = tuned.splits if splits is None else splits
+        block_k = tuned.block_k if block_k is None else block_k
+    splits = max(1, min(splits, w))
+    while w % splits:
+        splits -= 1
+    block_k = min(block_k, page_size)
+    while page_size % block_k:
+        block_k -= 1
+
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    out = fusemax_mla_decode_paged_pallas(
+        _fold_decode_q(q, b, 1, hq, e), ckv_pages, krope_pages,
+        block_table, kv_len,
+        scale=scale, softcap=softcap, splits=splits, block_k=block_k,
+        exp_impl=exp_impl, interpret=interpret,
+    )
+    return _unfold_decode_out(out, b, 1, hq, rank)
 
 
 def fusemax_decode(

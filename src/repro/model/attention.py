@@ -45,10 +45,14 @@ full head axis *inside* the mapped region so every downstream op (the
 output projection in particular, whose head contraction would otherwise
 become an order-sensitive cross-device psum) runs replicated on
 identically-ordered operands — greedy token streams stay bit-identical
-to the single-device paged path.  MLA shards storage only (the absorbed
-decode gathers the full latent view per step — the same per-step gather
-the unsharded path already does); GQA shards both storage and decode
-compute head-parallel.
+to the single-device paged path.  GQA shards decode compute
+head-parallel.  MLA cannot (every absorbed score contracts the full
+rank), so its decode shards *split-K-parallel* instead: the sweep is
+fixed at one split per block-table page, each device computes the
+(RM, RD, RNV) partials for its contiguous 1/tp strip of pages, the
+page-ordered partial stacks are all-gathered, and the associative
+running-max combine runs replicated — per-device decode FLOPs are 1/tp
+and the result is bit-identical to the unsharded per-page sweep.
 """
 from __future__ import annotations
 
@@ -61,7 +65,9 @@ import jax.numpy as jnp
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.distributed.sharding import shard_map_fn
 from repro.kernels.ops import (
-    fusemax_attention, fusemax_decode, fusemax_decode_paged, gather_pages,
+    fusemax_attention, fusemax_decode, fusemax_decode_paged,
+    fusemax_mla_decode_paged, gather_pages, mla_combine_partials,
+    mla_decode_partials,
 )
 from repro.model.layers import (
     Runtime, _init, apply_norm, norm_init, rope,
@@ -617,20 +623,47 @@ def mla_forward(
     return jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(dt))
 
 
+def _mla_absorbed_attend(
+    p, q_nope: jnp.ndarray, q_rope: jnp.ndarray,
+    ckv: jnp.ndarray, krope: jnp.ndarray, off: int,
+    cfg: ModelConfig, rt: Runtime,
+) -> jnp.ndarray:
+    """Absorbed-form chunk attention over a latent history (Hkv=1 fiber,
+    group = every q head): W_uk folds into the queries once per chunk
+    (``q_eff = q_nopeᵀW_uk``, resident across the whole chunk), scores hit
+    the rank-r latents + shared rope keys directly, and the accumulator
+    stays in latent space until the final W_uv lift — the per-head K/V
+    expansion of the history never exists, so chunked prefill bounds peak
+    activations on MLA layers exactly as it does on GQA.
+
+    ckv: [B, tot, r]; krope: [B, tot, rd] (history including this chunk).
+    Returns the per-head output [B, H, S, v_dim] (pre-``wo``)."""
+    m = cfg.mla
+    dt = q_nope.dtype
+    q_eff = jnp.einsum("bhse,rhe->bhsr", q_nope, p["w_uk"].astype(dt))
+    q_cat = jnp.concatenate([q_eff, q_rope], axis=-1)    # [B,H,S,r+rd]
+    k_cat = jnp.concatenate([ckv, krope], axis=-1)[:, None]
+    v_lat = ckv[:, None]                                 # [B,1,tot,r]
+    out_lat = fusemax_attention(
+        q_cat, k_cat, v_lat,
+        causal=cfg.causal, softcap=cfg.attn_softcap,
+        scale=1.0 / math.sqrt(m.nope_dim + m.rope_dim), q_offset=off,
+        impl=rt.attn_impl, block_q=rt.block_q, block_k=rt.block_k,
+        exp_impl=rt.exp_impl, interpret=rt.interpret,
+        unroll_scan=rt.unroll_runs,
+    )                                                    # [B,H,S,r]
+    return jnp.einsum("bhsr,rhe->bhse", out_lat, p["w_uv"].astype(dt))
+
+
 def mla_prefill_chunk(
     p, x: jnp.ndarray, cache: dict, off: int,
     cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
 ) -> tuple[jnp.ndarray, dict]:
     """Chunked-prefill continuation for MLA: the chunk's latents are written
-    at [off, off+S) and queries attend the full cached prefix (expanded
-    per-head, prefill form).
-
-    Limitation: the prefix is re-expanded to per-head K/V every chunk, so
-    for MLA layers ``prefill_chunk`` bounds neither peak activations nor
-    total work (GQA layers do get both).  An absorbed-form chunk prefill
-    (latent-space scores, as in :func:`mla_decode`) would fix this —
-    future work."""
-    m = cfg.mla
+    at [off, off+S) and queries attend the full cached prefix in absorbed
+    form (:func:`_mla_absorbed_attend`) — the prefix stays latent
+    ([tot, r + rd] per sequence instead of [H, tot, nope + rope_dim + v]),
+    so ``prefill_chunk`` bounds peak activations on MLA layers too."""
     b, s_len, _ = x.shape
     dt = x.dtype
     positions = jnp.broadcast_to(jnp.arange(off, off + s_len), (b, s_len))
@@ -639,23 +672,8 @@ def mla_prefill_chunk(
     krope = cache["krope"].at[:, off:off + s_len].set(krope_new)
 
     tot = off + s_len
-    h = cfg.n_heads
-    k_nope = jnp.einsum("bsr,rhe->bhse", ckv[:, :tot], p["w_uk"].astype(dt))
-    v = jnp.einsum("bsr,rhe->bhse", ckv[:, :tot], p["w_uv"].astype(dt))
-    q = jnp.concatenate([q_nope, q_rope], axis=-1)
-    k = jnp.concatenate(
-        [k_nope,
-         jnp.broadcast_to(krope[:, None, :tot], (b, h, tot, m.rope_dim))],
-        axis=-1,
-    )
-    out = fusemax_attention(
-        q, k, v,
-        causal=cfg.causal, softcap=cfg.attn_softcap,
-        scale=1.0 / math.sqrt(m.nope_dim + m.rope_dim), q_offset=off,
-        impl=rt.attn_impl, block_q=rt.block_q, block_k=rt.block_k,
-        exp_impl=rt.exp_impl, interpret=rt.interpret,
-        unroll_scan=rt.unroll_runs,
-    )
+    out = _mla_absorbed_attend(p, q_nope, q_rope, ckv[:, :tot],
+                               krope[:, :tot], off, cfg, rt)
     y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(dt))
     return y, {"ckv": ckv, "krope": krope}
 
@@ -732,16 +750,17 @@ def mla_prefill_paged(
 ) -> tuple[jnp.ndarray, dict]:
     """Prefill a prompt chunk's latents straight into the page pool; the
     chunk's queries attend the full cached prefix gathered through the
-    block-table rows (expanded per-head, mirroring
+    block-table rows in absorbed form (:func:`_mla_absorbed_attend` —
+    the W_uk-absorbed queries stay resident across the chunk and the
+    prefix is never re-expanded to per-head K/V, mirroring
     :func:`mla_prefill_chunk`).  ``cached_len`` masks writes below each
     row's shared-prefix extent (see :func:`gqa_prefill_paged`).
 
     With ``rt.kv_shard`` the latent pages are partitioned along the rank
     axis: each device writes its rank-slice, and the history view is
     all-gathered back to the full rank *inside* the mapped region so the
-    per-head expansion and attention run replicated — storage shards,
-    compute does not (the known MLA paged limitation)."""
-    m = cfg.mla
+    absorbed attention runs replicated (prefill happens once per prompt;
+    the per-step FLOP sharding lives in :func:`mla_decode_paged`)."""
     b, s_len, _ = x.shape
     dt = x.dtype
     positions = jnp.broadcast_to(jnp.arange(off, off + s_len), (b, s_len))
@@ -794,23 +813,7 @@ def mla_prefill_paged(
             return y, {"ckv_pages": ckv_pages, "krope_pages": krope_pages}
         ckv = gather_pages(ckv_pages, bt_rows[:, :hp])[:, :tot]
         krope = gather_pages(krope_pages, bt_rows[:, :hp])[:, :tot]
-    h = cfg.n_heads
-    k_nope = jnp.einsum("bsr,rhe->bhse", ckv, p["w_uk"].astype(dt))
-    v = jnp.einsum("bsr,rhe->bhse", ckv, p["w_uv"].astype(dt))
-    q = jnp.concatenate([q_nope, q_rope], axis=-1)
-    k = jnp.concatenate(
-        [k_nope,
-         jnp.broadcast_to(krope[:, None], (b, h, tot, m.rope_dim))],
-        axis=-1,
-    )
-    out = fusemax_attention(
-        q, k, v,
-        causal=cfg.causal, softcap=cfg.attn_softcap,
-        scale=1.0 / math.sqrt(m.nope_dim + m.rope_dim), q_offset=off,
-        impl=rt.attn_impl, block_q=rt.block_q, block_k=rt.block_k,
-        exp_impl=rt.exp_impl, interpret=rt.interpret,
-        unroll_scan=rt.unroll_runs,
-    )
+    out = _mla_absorbed_attend(p, q_nope, q_rope, ckv, krope, off, cfg, rt)
     y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(dt))
     return y, {"ckv_pages": ckv_pages, "krope_pages": krope_pages}
 
@@ -819,60 +822,82 @@ def mla_decode_paged(
     p, x: jnp.ndarray, cache: dict, bt_rows: jnp.ndarray,
     kv_len: jnp.ndarray, cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
 ) -> tuple[jnp.ndarray, dict]:
-    """Absorbed-form decode against paged latents: write the new latent at
-    the logical tail, gather the table view, score in latent space.
+    """Absorbed-form decode against paged latents, one split per page.
 
-    With ``rt.kv_shard`` each device writes its rank-slice of the latent
-    pages and the gathered table view is all-gathered back to the full
-    rank — the per-step gather the unsharded path already pays, now
-    sourced from a pool whose per-device bytes are 1/tp of the total."""
+    Unsharded, the step dispatches to
+    :func:`repro.kernels.ops.fusemax_mla_decode_paged`: on TPU the true
+    paged Pallas kernel (block-table lookup in the ``index_map`` — the
+    full latent table view is never materialized), elsewhere the per-page
+    jnp split-K sweep over the slot's gathered pages.
+
+    With ``rt.kv_shard`` the decode *FLOPs* shard, not just the bytes:
+    each device writes its rank-slice of the pages, all-gathers the
+    rank-complete history views (the storage bridge), then sweeps only
+    its contiguous ``W/tp`` strip of block-table pages —
+    :func:`repro.kernels.ops.mla_decode_partials` with a traced
+    ``axis_index`` page offset.  The page-ordered (RM, RD, RNV) partial
+    stacks are all-gathered (device order == page order on a 1-axis
+    mesh) and the associative running-max combine runs replicated on
+    identical operands, so the sharded stream is bit-identical to the
+    unsharded per-page sweep while per-device attention FLOPs are 1/tp.
+    Requires ``W % tp == 0`` (validated at engine construction).
+
+    The split structure is fixed by the page geometry on every path
+    (that is what makes unsharded and sharded streams match), so
+    ``rt.decode_splits`` does not apply to MLA paged decode."""
     m = cfg.mla
     dt = x.dtype
     pos = (kv_len - 1)[:, None]
     q_nope, q_rope, ckv_new, krope_new = _mla_qkv_latent(p, x, cfg, pos)
-    cap = bt_rows.shape[1] * cache["ckv_pages"].shape[1]
+    page_size = cache["ckv_pages"].shape[1]
+    w = bt_rows.shape[1]
+    cap = w * page_size
     valid = (kv_len > 0)[:, None]
+    scale = 1.0 / math.sqrt(m.nope_dim + m.rope_dim)
+
+    q_eff = jnp.einsum("bhse,rhe->bhsr", q_nope, p["w_uk"].astype(dt))
+    q_cat = jnp.concatenate([q_eff, q_rope], axis=-1)    # [B,H,1,r+rd]
 
     shard = rt.kv_shard
     if shard is not None:
-        def local(cp, krp, cn_l, kn_l, bt, pos_b, val):
+        sp = w // shard.size                 # pages swept per device
+
+        def local(cp, krp, cn_l, kn_l, qc, bt, pos_b, val, kvl):
             cp = write_pages(cp, bt, pos_b, cn_l, cap, val)
             krp = write_pages(krp, bt, pos_b, kn_l, cap, val)
-            ckv_l = gather_pages(cp, bt)
-            kr_l = gather_pages(krp, bt)
-            ckv = jax.lax.all_gather(ckv_l, shard.axis, axis=2, tiled=True)
-            kr = jax.lax.all_gather(kr_l, shard.axis, axis=2, tiled=True)
-            return cp, krp, ckv, kr
+            ckv = jax.lax.all_gather(gather_pages(cp, bt), shard.axis,
+                                     axis=2, tiled=True)
+            kr = jax.lax.all_gather(gather_pages(krp, bt), shard.axis,
+                                    axis=2, tiled=True)
+            d = jax.lax.axis_index(shard.axis)
+            pm, pl_, pnv = mla_decode_partials(
+                qc, ckv, kr, kvl, start_page=d * sp, n_splits=sp,
+                page_size=page_size, scale=scale, softcap=cfg.attn_softcap)
+            pm = jax.lax.all_gather(pm, shard.axis, axis=1, tiled=True)
+            pl_ = jax.lax.all_gather(pl_, shard.axis, axis=1, tiled=True)
+            pnv = jax.lax.all_gather(pnv, shard.axis, axis=1, tiled=True)
+            return mla_combine_partials(pm, pl_, pnv, qc.dtype), cp, krp
 
         pspec = shard.spec(3, -1)
         rep = shard.replicated
-        ckv_pages, krope_pages, ckv, krope = shard_map_fn()(
+        out_lat, ckv_pages, krope_pages = shard_map_fn()(
             local, mesh=shard.mesh,
-            in_specs=(pspec, pspec, pspec, pspec, rep, rep, rep),
-            out_specs=(pspec, pspec, rep, rep),
+            in_specs=(pspec, pspec, pspec, pspec, rep, rep, rep, rep, rep),
+            out_specs=(rep, pspec, pspec),
         )(cache["ckv_pages"], cache["krope_pages"], ckv_new, krope_new,
-          bt_rows, pos, valid)
+          q_cat, bt_rows, pos, valid, kv_len)
     else:
         ckv_pages = write_pages(cache["ckv_pages"], bt_rows, pos, ckv_new,
                                 cap, valid)
         krope_pages = write_pages(cache["krope_pages"], bt_rows, pos,
                                   krope_new, cap, valid)
-        ckv = gather_pages(ckv_pages, bt_rows)           # [B, T, r]
-        krope = gather_pages(krope_pages, bt_rows)
-    q_eff = jnp.einsum("bhse,rhe->bhsr", q_nope, p["w_uk"].astype(dt))
-    q_cat = jnp.concatenate([q_eff, q_rope], axis=-1)    # [B,H,1,r+rd]
-    k_cat = jnp.concatenate([ckv, krope], axis=-1)[:, None]
-    v_lat = ckv[:, None]
-
-    out_lat = fusemax_decode(
-        q_cat, k_cat, v_lat, kv_len,
-        scale=1.0 / math.sqrt(m.nope_dim + m.rope_dim),
-        softcap=cfg.attn_softcap,
-        impl=rt.attn_impl,
-        splits=rt.decode_splits,
-        exp_impl=rt.exp_impl,
-        interpret=rt.interpret,
-    )                                                    # [B,H,1,r]
+        out_lat = fusemax_mla_decode_paged(
+            q_cat, ckv_pages, krope_pages, bt_rows, kv_len,
+            scale=scale, softcap=cfg.attn_softcap,
+            impl=rt.attn_impl,
+            exp_impl=rt.exp_impl,
+            interpret=rt.interpret,
+        )                                                # [B,H,1,r]
     out = jnp.einsum("bhsr,rhe->bhse", out_lat, p["w_uv"].astype(dt))
     y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(dt))
     return y, {"ckv_pages": ckv_pages, "krope_pages": krope_pages}

@@ -231,6 +231,16 @@ class ServeEngine:
                                    prefix_caching=prefix_caching,
                                    shard=shard)
             self.caches = self.kv.caches
+            if shard is not None and any(
+                    s.attn == "mla" for s in cfg.layer_specs()):
+                w = self.kv.classes["full"].table_width
+                if w % shard.size:
+                    raise ValueError(
+                        f"MLA rank-sharded decode sweeps the block table "
+                        f"in contiguous per-device page strips, so the "
+                        f"table width {w} (= ceil(max_len/page_size)) "
+                        f"must divide by tp={shard.size} — adjust "
+                        f"max_len or page_size")
         else:
             self.kv = None
             self.caches = tf.init_cache(cfg, slots, max_len, dtype)
@@ -365,15 +375,19 @@ class ServeEngine:
         traffic): one trace per (admission-width power of two, length
         bucket) covers every prefill jit key those lengths can produce,
         plus the decode loops (1 and ``decode_chunk``).
+
+        With prefix caching enabled, a second phase replays identical
+        prompts against a *live* index so the tail-offset prefill keys a
+        prefix hit produces — (width, tail bucket, shared-prefix offset),
+        including the page-aligned COW resend offsets — compile here
+        instead of on the first real hit.
         """
         t0 = time.perf_counter()
         prefix_was = False
         if self.kv is not None:
-            # warmup must compile the *cold* prefill keys: with the index
+            # phase 1 must compile the *cold* prefill keys: with the index
             # live, the identical dummy prompts would hit each other and
-            # compile tail-offset keys instead.  (Tail-offset keys depend
-            # on real traffic's prefix lengths, so they compile on first
-            # hit — once per (width, tail bucket, offset).)
+            # skip the cold (offset-0) traces.
             prefix_was = self.kv.prefix_enabled
             self.kv.prefix_enabled = False
         try:
@@ -383,16 +397,34 @@ class ServeEngine:
                               for p in lens})
             counts = {self.slots} | {
                 1 << i for i in range((self.slots - 1).bit_length())}
+
+            def trace(count, plen):
+                dummies = [Request(rid=-1 - i,
+                                   prompt=np.zeros((plen,), np.int32),
+                                   max_new_tokens=self.decode_chunk)
+                           for i in range(count)]
+                for r in dummies:
+                    self.submit(r)
+                self.run()
+
             for b in buckets:
                 plen = min(b, self.max_len - 1)
                 for count in sorted(counts, reverse=True):
-                    dummies = [Request(rid=-1 - i,
-                                       prompt=np.zeros((plen,), np.int32),
-                                       max_new_tokens=self.decode_chunk)
-                               for i in range(count)]
-                    for r in dummies:
-                        self.submit(r)
-                    self.run()
+                    trace(count, plen)
+            if prefix_was:
+                # phase 2 — tail-offset keys: identical zero prompts, two
+                # waves per (bucket, width) with the index live.  Wave 1
+                # registers the prefix (the widths > 1 also exercise
+                # same-batch sharing); wave 2 is a full-coverage resend —
+                # the page-aligned / COW hit offsets real resend traffic
+                # produces.  Cross-bucket hits (longer zeros over shorter
+                # registered prefixes) cover the partial-hit offsets.
+                self.kv.prefix_enabled = True
+                for b in buckets:
+                    plen = min(b, self.max_len - 1)
+                    for count in sorted(counts, reverse=True):
+                        for _ in range(2):
+                            trace(count, plen)
             # slots auto-freed on completion; dummy cache rows/pages are
             # fully overwritten by the next admission.  Reset counters and
             # drop the prefix entries the dummy prompts registered —

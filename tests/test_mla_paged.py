@@ -1,0 +1,190 @@
+"""Paged latent-space MLA decode + absorbed-form chunk prefill.
+
+Kernel tier: the paged MLA Pallas kernel (and the per-page jnp split-K
+fallback) against the 3-pass oracle over the gathered latent view, with
+ragged kv_len at page-aligned and unaligned lengths and shuffled block
+tables.  Engine tier: absorbed-form chunked prefill must reproduce the
+whole-prompt greedy streams (deepseek MLA geometry, dense FFN — see the
+test docstring for why MoE routing chaos excludes the full config from
+that exact statement), streams must be identical across cache layouts on
+the full MoE config, and warmup with prefix caching live must pre-compile
+the tail-offset prefill keys so resend traffic compiles nothing.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.kernels import (
+    decode_reference, fusemax_mla_decode_paged, gather_pages,
+    mla_combine_partials, mla_decode_partials,
+)
+from repro.model import transformer as tf
+from repro.model.layers import Runtime
+from repro.serving.engine import Request, ServeEngine
+
+RT = Runtime(activation_dtype=jnp.float32, param_dtype=jnp.float32)
+
+
+def _mla_case(seed, b, h, r, rd, n_pages, ps, w, kv_len):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3 + b)
+    q = jax.random.normal(ks[0], (b, h, 1, r + rd), jnp.float32)
+    ckv_pages = jax.random.normal(ks[1], (n_pages, ps, r), jnp.float32)
+    krope_pages = jax.random.normal(ks[2], (n_pages, ps, rd), jnp.float32)
+    bt = jnp.stack([jax.random.permutation(ks[3 + i], n_pages)[:w]
+                    for i in range(b)]).astype(jnp.int32)
+    return q, ckv_pages, krope_pages, bt, jnp.asarray(kv_len, jnp.int32)
+
+
+def _mla_oracle(q, ckv_pages, krope_pages, bt, kv_len, scale, softcap=None):
+    cg = gather_pages(ckv_pages, bt)
+    kg = gather_pages(krope_pages, bt)
+    k = jnp.concatenate([cg, kg], axis=-1)[:, None]      # [B,1,T,r+rd]
+    return decode_reference(q, k, cg[:, None], kv_len, scale=scale,
+                            softcap=softcap)
+
+
+def test_mla_paged_decode_matches_reference():
+    """Ragged kv_len: one page-unaligned, one page-aligned, one exactly
+    filling the table — jnp (per-page split-K) and Pallas (paged kernel,
+    interpret on CPU) against the oracle."""
+    b, h, r, rd = 3, 4, 32, 16
+    n_pages, ps, w = 12, 8, 4
+    kv_len = [13, 16, 32]          # unaligned / aligned / full table
+    q, cp, kp, bt, kvl = _mla_case(0, b, h, r, rd, n_pages, ps, w, kv_len)
+    scale = 1.0 / np.sqrt(48.0)
+    ref = _mla_oracle(q, cp, kp, bt, kvl, scale)
+    for impl in ("jnp", "pallas"):
+        out = fusemax_mla_decode_paged(q, cp, kp, bt, kvl, scale=scale,
+                                       impl=impl)
+        assert out.shape == (b, h, 1, r)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5,
+                                   err_msg=f"impl={impl}")
+
+
+def test_mla_paged_decode_softcap_and_tiling():
+    """Explicit splits/block_k (sub-page tiles) + logit softcap."""
+    b, h, r, rd = 1, 8, 64, 32
+    n_pages, ps, w = 16, 16, 8
+    q, cp, kp, bt, kvl = _mla_case(1, b, h, r, rd, n_pages, ps, w, [77])
+    scale = 1.0 / np.sqrt(96.0)
+    ref = _mla_oracle(q, cp, kp, bt, kvl, scale, softcap=30.0)
+    out = fusemax_mla_decode_paged(q, cp, kp, bt, kvl, scale=scale,
+                                   softcap=30.0, impl="pallas", splits=4,
+                                   block_k=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_mla_partials_offset_strips_match_full_sweep():
+    """The rank-sharded decode contract, minus the mesh: partials computed
+    in per-device strips (traced start_page offsets) and stacked in page
+    order must combine BIT-identically to the single full-table sweep."""
+    b, h, r, rd = 2, 4, 32, 16
+    n_pages, ps, w = 10, 8, 8
+    q, cp, kp, bt, kvl = _mla_case(2, b, h, r, rd, n_pages, ps, w, [13, 29])
+    scale = 1.0 / np.sqrt(48.0)
+    ckv = gather_pages(cp, bt)
+    kr = gather_pages(kp, bt)
+
+    @jax.jit
+    def full(q, ckv, kr, kvl):
+        pm, pl_, pnv = mla_decode_partials(
+            q, ckv, kr, kvl, start_page=0, n_splits=w, page_size=ps,
+            scale=scale)
+        return mla_combine_partials(pm, pl_, pnv, q.dtype)
+
+    @jax.jit
+    def strips(q, ckv, kr, kvl, starts):
+        sp = w // len(starts)
+        parts = [mla_decode_partials(q, ckv, kr, kvl, start_page=s,
+                                     n_splits=sp, page_size=ps, scale=scale)
+                 for s in starts]           # starts are traced (device ids)
+        pm, pl_, pnv = (jnp.concatenate([p[i] for p in parts], axis=1)
+                        for i in range(3))
+        return mla_combine_partials(pm, pl_, pnv, q.dtype)
+
+    ref = full(q, ckv, kr, kvl)
+    for tp in (2, 4):
+        starts = jnp.asarray([d * (w // tp) for d in range(tp)])
+        out = strips(q, ckv, kr, kvl, starts)
+        assert bool((out == ref).all()), f"tp={tp} not bit-identical"
+
+
+def _serve(cfg, params, prompts, layout, **kw):
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, rt=RT,
+                      decode_chunk=4, cache_layout=layout, **kw)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=6)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done for r in reqs)
+    return [list(r.generated) for r in reqs]
+
+
+def test_mla_absorbed_chunk_prefill_matches_full():
+    """Absorbed-form chunked prefill (the prefix stays latent) reproduces
+    the whole-prompt greedy streams — tested on the deepseek MLA geometry
+    with the MoE swapped for a dense FFN.  The absorbed form reassociates
+    the score/value GEMMs ((q·W_uk)·ckv vs q·(W_uk·ckv)), which is exact
+    math but not exact floats; a top-k expert router sitting on a decision
+    boundary amplifies those ulps into different expert choices, so
+    chunk↔full stream equality is only well-posed without MoE routing
+    (cross-layout equality on the full MoE config is the next test)."""
+    cfg = dataclasses.replace(get_config("deepseek-v3-671b-smoke"),
+                              moe=None, family="dense", n_mtp=0)
+    params, _ = tf.init(cfg, jax.random.PRNGKey(0), RT)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, l).astype(np.int32)
+               for l in (21, 9, 30, 14)]
+    dense_full = _serve(cfg, params, prompts, "dense")
+    dense_chunk = _serve(cfg, params, prompts, "dense", prefill_chunk=8)
+    assert dense_full == dense_chunk
+    paged_chunk = _serve(cfg, params, prompts, "paged", page_size=8,
+                         prefill_chunk=8)
+    assert dense_chunk == paged_chunk
+
+
+def test_mla_chunk_prefill_cross_layout_identical_with_moe():
+    """deepseek smoke (MoE intact): the absorbed chunk continuation runs
+    identical arithmetic on the dense cache and through the page pool, so
+    greedy streams must match EXACTLY across layouts — chunked and
+    whole-prompt alike — even where router chaos makes chunked≠full."""
+    cfg = get_config("deepseek-v3-671b-smoke")
+    params, _ = tf.init(cfg, jax.random.PRNGKey(0), RT)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, l).astype(np.int32)
+               for l in (21, 9, 30, 14)]
+    assert _serve(cfg, params, prompts, "dense") == \
+        _serve(cfg, params, prompts, "paged", page_size=8)
+    assert _serve(cfg, params, prompts, "dense", prefill_chunk=8) == \
+        _serve(cfg, params, prompts, "paged", page_size=8, prefill_chunk=8)
+
+
+def test_warmup_precompiles_tail_offset_keys():
+    """With prefix caching live, warmup's resend phase must cover the
+    (width, tail-bucket, offset) prefill keys that identical-prompt
+    resend traffic produces — serving such traffic after warmup compiles
+    no new prefill executable."""
+    cfg = get_config("stablelm-1.6b-smoke")
+    params, _ = tf.init(cfg, jax.random.PRNGKey(0), RT)
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, rt=RT,
+                      decode_chunk=4, cache_layout="paged", page_size=8)
+    assert eng.kv.prefix_enabled
+    eng.warmup(16)
+    keys = set(eng._prefill_fns)
+    assert any(off > 0 for _, _, off in keys), keys
+    prompt = np.random.default_rng(4).integers(
+        0, cfg.vocab, 16).astype(np.int32)
+    for rep in range(2):                  # cold, then full-resend hit
+        r = Request(rid=rep, prompt=prompt.copy(), max_new_tokens=4)
+        eng.submit(r)
+        eng.run()
+        assert r.done
+    assert eng.stats["prefix_hits"] >= 1, eng.stats
+    assert set(eng._prefill_fns) == keys, \
+        set(eng._prefill_fns) - keys

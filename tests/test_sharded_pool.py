@@ -114,7 +114,9 @@ def test_sharded_gqa_matches_unsharded_with_prefix_and_cow():
 
 def test_sharded_mla_matches_unsharded():
     """deepseek smoke (MLA + MoE) on tp=4: latent pages shard on the rank
-    axis; greedy streams identical."""
+    axis AND decode FLOPs shard split-K-parallel (each device sweeps its
+    1/tp strip of block-table pages; partials combine with the
+    associative running-max algebra) — greedy streams identical."""
     out = run_sub("""
         cfg = get_config("deepseek-v3-671b-smoke")
         params, _ = tf.init(cfg, jax.random.PRNGKey(0), rt)
@@ -129,6 +131,32 @@ def test_sharded_mla_matches_unsharded():
         print("MLA-SHARDED-OK")
     """)
     assert "MLA-SHARDED-OK" in out
+
+
+def test_sharded_mla_chunked_prefill_matches_unsharded():
+    """deepseek smoke with chunked prefill on tp=4: the absorbed-form
+    chunk continuation (latent prefix all-gathered to full rank inside
+    the mapped region) must reproduce the unsharded streams; a table
+    width the mesh does not divide must be refused up front (the
+    split-K decode sweeps contiguous per-device page strips)."""
+    out = run_sub("""
+        cfg = get_config("deepseek-v3-671b-smoke")
+        params, _ = tf.init(cfg, jax.random.PRNGKey(0), rt)
+        mesh = make_mesh((4,), ("model",))
+        plens = (12, 20, 9, 17)
+        o0, e0 = serve(cfg, params, None, plens, prefill_chunk=8)
+        o1, e1 = serve(cfg, params, mesh, plens, prefill_chunk=8)
+        assert o0 == o1, (o0, o1)
+        try:
+            # max_len 40 / page_size 8 -> 5-page table, not divisible by 4
+            ServeEngine(cfg, params, slots=2, max_len=40, rt=rt,
+                        cache_layout="paged", page_size=8, mesh=mesh)
+            raise SystemExit("indivisible table width did not raise")
+        except ValueError as e:
+            assert "table width" in str(e), str(e)
+        print("MLA-CHUNKED-SHARDED-OK")
+    """)
+    assert "MLA-CHUNKED-SHARDED-OK" in out
 
 
 def test_sharded_windowed_chunked_matches_unsharded():
