@@ -10,7 +10,14 @@ below ``min_tok_per_s_ratio`` x the baseline (default 0.7 — wide enough
 for runner jitter, tight enough to catch a dispatch-economics or
 compile-cache regression), or when ``tokens_reused`` falls below the
 baseline floor (the prefix cache silently degrading would otherwise only
-show up as a slow tok/s drift).  The gate is applied to the top-level
+show up as a slow tok/s drift).  A baseline entry with a
+``speculation`` block additionally gates the speculative-decode smoke:
+``accepted_per_dispatch`` / ``accept_rate`` / ``spec_vs_base_tok_per_s``
+each have a ``min_*`` floor — acceptance quietly collapsing (a proposer
+or accept-rule regression) would otherwise read as runner jitter.  The
+acceptance floors are deterministic counters, so they sit close to the
+measured values; the speedup-ratio floor is wall-clock and sits wide.
+The gate is applied to the top-level
 (primary-layout) tok/s AND per layout for every entry in the baseline's
 ``layouts`` block — the smoke's primary layout is dense, so without the
 per-layout floors a regression confined to the paged/prefix paths (the
@@ -87,6 +94,26 @@ def check(metrics: dict, baseline_all: dict, key: str,
         failures.append(
             f"prefix-cache regression: tokens_reused {reused} < "
             f"baseline {base_reused}")
+    spec_base = base.get("speculation")
+    if spec_base:
+        sp = metrics.get("speculation")
+        if sp is None:
+            failures.append("baseline gates speculation but the bench run "
+                            "has no 'speculation' block (was --speculate "
+                            "dropped from the invocation?)")
+        else:
+            for field in ("accepted_per_dispatch", "accept_rate",
+                          "spec_vs_base_tok_per_s"):
+                floor = spec_base.get(f"min_{field}")
+                if floor is None:
+                    continue
+                got = float(sp[field])
+                print(f"[{key}] speculation {field} {got} "
+                      f"(gate: >= {floor})")
+                if got < float(floor):
+                    failures.append(
+                        f"speculation regression: {field} {got} < "
+                        f"{floor} floor")
     return failures
 
 
@@ -96,7 +123,7 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default="BENCH_baseline.json")
     ap.add_argument("--key", default="serving_smoke",
                     help="baseline entry to gate against "
-                         "(serving_smoke | prefix_smoke)")
+                         "(serving_smoke | prefix_smoke | spec_smoke)")
     ap.add_argument("--leg", default="",
                     help="CI matrix leg (oldest | newest); a baseline "
                          "entry '<key>@<leg>' overrides the shared one")

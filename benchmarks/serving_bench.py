@@ -14,7 +14,15 @@ peak pages in use for each.  Extra flags pass through to the launcher —
 e.g. ``--smoke --shared-prefix-len 64`` turns the trace into
 shared-system-prompt traffic and reports the paged engine's prefix-cache
 hit rate and prefill-dispatch savings (plus a third greedy cross-check
-against the prefix-cache-disabled paged engine).
+against the prefix-cache-disabled paged engine), and
+``--smoke --speculate 8 --duplicates 8`` benchmarks speculative decoding
+on duplicate-query traffic (accept rate, committed tokens per dispatch,
+spec-vs-base tok/s on the identical trace, spec == non-spec greedy
+cross-check).  Timing honesty: between ``--repeats`` the launcher clears
+BOTH the prefix index and the proposer's n-gram table — a warm table
+would memorize the identical re-served trace and report fake acceptance;
+the within-trace duplication that ``--duplicates`` adds is a disclosed
+workload property, not a benchmarking artifact.
 """
 from __future__ import annotations
 

@@ -258,6 +258,32 @@ def mla_paged_decode_params(n_pages: int, page_size: int, g: int,
     return best
 
 
+def verify_block_k(block_k: int, *, p: int, g: int, e: int, f: int,
+                   elem_bytes: int = 4) -> int:
+    """VMEM sanity-clamp for the speculative *verify* dispatch.
+
+    Verify reuses the split geometry tuned for single-token decode (the
+    autotune key never sees P — that is what keeps per-position outputs
+    bit-identical to non-speculative decode), but the q tile and the
+    running-state scratch grow p-fold (p positions × g rows).  Halve
+    ``block_k`` until the grown working set fits ``VMEM_BUDGET`` —
+    halving preserves the wrappers' divisibility contracts (block_k
+    divides split_len / page_size, both powers-of-two-multiples).
+    ``splits`` is never touched: the split count shapes the associative
+    combine, block_k only tiles the sequential sweep."""
+    if p <= 1:
+        return block_k
+    rows = p * g
+    base = _ARCH.pe2d_cols
+    while block_k > base:
+        vmem = (rows * e + block_k * (e + f) + rows * f
+                + 2 * rows * 128) * elem_bytes
+        if vmem <= VMEM_BUDGET:
+            break
+        block_k //= 2
+    return block_k
+
+
 def decode_params(m: int, g: int, e: int, f: int, *,
                   backend: str = "cpu",
                   impl: str = "jnp") -> DecodeParams:

@@ -70,6 +70,8 @@ def _decode_partials_kernel(
     m2_total: int,
     split_len: int,
     exp_impl: str,
+    n_pos: int = 1,
+    rows_per_pos: int = 0,
 ):
     bh = pl.program_id(0)
     s = pl.program_id(1)
@@ -85,7 +87,8 @@ def _decode_partials_kernel(
         acc_scratch[...] = jnp.zeros_like(acc_scratch)
 
     k_lo = s * split_len + m2 * block_k
-    run = k_lo < kv_len
+    # verify chains (p > 1): the last draft position sees p-1 extra keys
+    run = k_lo < kv_len + (n_pos - 1)
     if window is not None:
         run &= (k_lo + block_k - 1) > q_pos - window
 
@@ -105,7 +108,13 @@ def _decode_partials_kernel(
 
         cols = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
         kpos = k_lo + cols
-        ok = kpos < kv_len                               # ragged mask
+        if n_pos == 1:
+            ok = kpos < kv_len                           # ragged mask
+        else:
+            # row r carries draft position r // rows_per_pos, which
+            # attends causally to keys < kv_len + position
+            rows = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 0)
+            ok = kpos < kv_len + rows // rows_per_pos
         if window is not None:
             ok &= kpos > q_pos - window
         sc = jnp.where(ok, sc, NEG_INF)
@@ -145,10 +154,19 @@ def fusemax_decode_pallas(
     block_k: int = 256,
     exp_impl: str = "native",
     interpret: bool = False,
+    p: int = 1,
 ) -> jnp.ndarray:
-    """Split-K FuseMax decode. Returns [BHkv, G, F] (q.dtype)."""
+    """Split-K FuseMax decode. Returns [BHkv, G, F] (q.dtype).
+
+    With ``p > 1`` the G axis is a folded verify chain (p positions ×
+    G/p heads, see ``ops._fold_decode_q``): row r is draft position
+    r // (G/p), which attends to keys < kv_len + position."""
     bh, g, e = q.shape
     _, mp, f = v.shape
+    if g % p:
+        raise ValueError(f"folded q rows {g} not divisible by p={p}")
+    if window is not None and p != 1:
+        raise ValueError("multi-query verify does not support windows")
     if mp % splits:
         raise ValueError(f"M={mp} not divisible by splits={splits}")
     split_len = mp // splits
@@ -168,6 +186,8 @@ def fusemax_decode_pallas(
         m2_total=m2,
         split_len=split_len,
         exp_impl=exp_impl,
+        n_pos=p,
+        rows_per_pos=g // p,
     )
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -238,6 +258,8 @@ def _paged_decode_partials_kernel(
     m2_total: int,
     split_len: int,
     exp_impl: str,
+    n_pos: int = 1,
+    rows_per_pos: int = 0,
 ):
     """Same running-state sweep as :func:`_decode_partials_kernel`, but the
     K/V tiles were block-selected through the block table (see the
@@ -256,7 +278,7 @@ def _paged_decode_partials_kernel(
         acc_scratch[...] = jnp.zeros_like(acc_scratch)
 
     k_lo = s * split_len + m2 * block_k      # logical token index
-    run = k_lo < kv_len
+    run = k_lo < kv_len + (n_pos - 1)            # chain tail sees p-1 extra keys
 
     @pl.when(run)
     def _body():
@@ -272,7 +294,13 @@ def _paged_decode_partials_kernel(
             sc = softcap * jnp.tanh(sc / softcap)
 
         cols = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
-        ok = (k_lo + cols) < kv_len                      # ragged mask
+        if n_pos == 1:
+            ok = (k_lo + cols) < kv_len                  # ragged mask
+        else:
+            # causal intra-draft mask: folded row r is draft position
+            # r // rows_per_pos and sees keys < kv_len + position
+            rows = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 0)
+            ok = (k_lo + cols) < kv_len + rows // rows_per_pos
         sc = jnp.where(ok, sc, NEG_INF)
 
         m_prev = m_scratch[:, :1]
@@ -310,8 +338,10 @@ def fusemax_decode_paged_pallas(
     block_k: int = 128,
     exp_impl: str = "native",
     interpret: bool = False,
+    p: int = 1,
 ) -> jnp.ndarray:
     """Paged split-K FuseMax decode. Returns [BHkv, G, F] (q.dtype).
+    With ``p > 1`` the G axis folds a verify chain (see the dense kernel).
 
     The grid sweeps logical token chunks; each K/V tile's physical page is
     looked up in the block table inside the ``index_map`` (standard paged
@@ -321,6 +351,8 @@ def fusemax_decode_paged_pallas(
     bh, g, e = q.shape
     n_pages, page_size, hkv_p, f = v_pages.shape
     b, w = block_table.shape
+    if g % p:
+        raise ValueError(f"folded q rows {g} not divisible by p={p}")
     if hkv_p != hkv:
         raise ValueError(f"pages carry Hkv={hkv_p}, caller says {hkv}")
     if bh != b * hkv:
@@ -345,6 +377,8 @@ def fusemax_decode_paged_pallas(
         m2_total=m2,
         split_len=split_len,
         exp_impl=exp_impl,
+        n_pos=p,
+        rows_per_pos=g // p,
     )
 
     def _kv_index(bh_i, s, m2_i, kv_len_ref, bt_ref):
@@ -410,6 +444,8 @@ def _mla_paged_decode_partials_kernel(
     m2_total: int,
     split_len: int,
     exp_impl: str,
+    n_pos: int = 1,
+    rows_per_pos: int = 0,
 ):
     """Latent-space (MLA absorbed-form) variant of
     :func:`_paged_decode_partials_kernel`.  The query tile carries the
@@ -431,7 +467,7 @@ def _mla_paged_decode_partials_kernel(
 
     k_lo = s * split_len + m2 * block_k      # logical token index
 
-    @pl.when(k_lo < kv_len)
+    @pl.when(k_lo < kv_len + (n_pos - 1))
     def _body():
         q_tile = q_ref[0].astype(jnp.float32)            # [G, r + rope]
         ckv_tile = ckv_ref[0].astype(jnp.float32)        # [block_k, r]
@@ -449,7 +485,11 @@ def _mla_paged_decode_partials_kernel(
             sc = softcap * jnp.tanh(sc / softcap)
 
         cols = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
-        ok = (k_lo + cols) < kv_len                      # ragged mask
+        if n_pos == 1:
+            ok = (k_lo + cols) < kv_len                  # ragged mask
+        else:
+            rows = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 0)
+            ok = (k_lo + cols) < kv_len + rows // rows_per_pos
         sc = jnp.where(ok, sc, NEG_INF)
 
         m_prev = m_scratch[:, :1]
@@ -486,6 +526,7 @@ def fusemax_mla_decode_paged_pallas(
     block_k: int = 128,
     exp_impl: str = "native",
     interpret: bool = False,
+    p: int = 1,
 ) -> jnp.ndarray:
     """Paged split-K MLA decode in latent space. Returns [B, G, rank]
     (q.dtype) — the latent output, before the W_uv up-projection.
@@ -499,6 +540,8 @@ def fusemax_mla_decode_paged_pallas(
     n_pages, page_size, rank = ckv_pages.shape
     rope_dim = krope_pages.shape[-1]
     bt_b, w = block_table.shape
+    if g % p:
+        raise ValueError(f"folded q rows {g} not divisible by p={p}")
     if e != rank + rope_dim:
         raise ValueError(f"q last dim {e} != rank {rank} + rope {rope_dim}")
     if bt_b != b:
@@ -523,6 +566,8 @@ def fusemax_mla_decode_paged_pallas(
         m2_total=m2,
         split_len=split_len,
         exp_impl=exp_impl,
+        n_pos=p,
+        rows_per_pos=g // p,
     )
 
     def _page_index(b_i, s, m2_i, kv_len_ref, bt_ref):

@@ -370,24 +370,76 @@ def _decode_splitk_jnp(
     return out.reshape(b, hq, 1, f).astype(q.dtype)
 
 
+def _verify_splitk_jnp(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    kv_len: jnp.ndarray,
+    *, scale: float, softcap: Optional[float], splits: int,
+) -> jnp.ndarray:
+    """Multi-query (draft-chain verify) split-K decode.
+
+    Query position ``j`` of the P-token chain sits at logical position
+    ``kv_len - 1 + j`` and attends to keys ``< kv_len + j`` (``kv_len``
+    counts the cache *including query 0*) — the causal intra-draft mask.
+    Mirrors :func:`_decode_splitk_jnp` exactly — same split geometry
+    (resolved from the same autotune key, which never sees P), same
+    einsum contractions with P as a free batch axis, same reduction
+    order — so each position's output matches the single-token path
+    bit-for-bit and committed speculative streams are identical to
+    non-speculative decode.
+    """
+    b, hq, p, e = q.shape
+    _, hkv, m, f = v.shape
+    group = hq // hkv
+    ms = m // splits
+    q6 = q.astype(jnp.float32).reshape(b, hkv, group, p, e)
+    ks = k.astype(jnp.float32).reshape(b, hkv, splits, ms, e)
+    vs = v.astype(jnp.float32).reshape(b, hkv, splits, ms, f)
+
+    logits = jnp.einsum("bhgpe,bhsme->bhsgpm", q6, ks) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    kpos = (jnp.arange(splits)[:, None] * ms + jnp.arange(ms)[None, :])
+    lim = kv_len[:, None] + jnp.arange(p)[None, :]           # [B, P]
+    ok = kpos[None, None] < lim[:, :, None, None]            # [B, P, S, Ms]
+    ok = ok.transpose(0, 2, 1, 3)                            # [B, S, P, Ms]
+    logits = jnp.where(ok[:, None, :, None], logits, NEG_INF)
+
+    lm = jnp.max(logits, axis=-1)                            # [b,h,s,g,p]
+    sln = jnp.exp(logits - lm[..., None])
+    sld = jnp.sum(sln, axis=-1)
+    slnv = jnp.einsum("bhsgpm,bhsmf->bhsgpf", sln, vs)
+    gm = jnp.max(lm, axis=2, keepdims=True)
+    cf = jnp.exp(lm - gm)
+    rd = jnp.sum(sld * cf, axis=2)                           # [b,h,g,p]
+    rnv = jnp.sum(slnv * cf[..., None], axis=2)
+    rd = jnp.where(rd == 0.0, 1.0, rd)
+    out = rnv / rd[..., None]
+    return out.reshape(b, hq, p, f).astype(q.dtype)
+
+
 def _fold_decode_q(q: jnp.ndarray, b: int, hkv: int, group: int,
                    e: int) -> jnp.ndarray:
-    """Fold GQA groups into kernel query rows ([B, Hq, 1, E] →
-    [B·Hkv, G_pad, E], G padded to the 8-sublane floor) — shared by the
-    dense and paged decode dispatch paths."""
+    """Fold GQA groups into kernel query rows ([B, Hq, P, E] →
+    [B·Hkv, P·G_pad, E], G padded to the 8-sublane floor; P = 1 for
+    plain decode, = the chain length for verify — row ``r`` carries
+    draft position ``r // G_pad``) — shared by the dense and paged
+    decode dispatch paths."""
+    p = q.shape[2]
     g_pad = max(8, _round_up(group, 8))
-    q_f = q.reshape(b, hkv, group, e).reshape(b * hkv, group, e)
+    q_f = q.reshape(b, hkv, group, p, e).transpose(0, 1, 3, 2, 4)
     if g_pad != group:
-        q_f = jnp.pad(q_f, ((0, 0), (0, g_pad - group), (0, 0)))
-    return q_f
+        q_f = jnp.pad(q_f, ((0, 0), (0, 0), (0, 0),
+                            (0, g_pad - group), (0, 0)))
+    return q_f.reshape(b * hkv, p * g_pad, e)
 
 
 def _unfold_decode_out(out: jnp.ndarray, b: int, hkv: int, group: int,
-                       f: int) -> jnp.ndarray:
+                       f: int, p: int = 1) -> jnp.ndarray:
     """Inverse of :func:`_fold_decode_q` for kernel outputs
-    ([B·Hkv, G_pad, F] → [B, Hq, 1, F])."""
-    out = out[:, :group]
-    return out.reshape(b, hkv, group, f).reshape(b, hkv * group, 1, f)
+    ([B·Hkv, P·G_pad, F] → [B, Hq, P, F])."""
+    g_pad = out.shape[1] // p
+    out = out.reshape(b, hkv, p, g_pad, f)[:, :, :, :group]
+    return out.transpose(0, 1, 3, 2, 4).reshape(b, hkv * group, p, f)
 
 
 def gather_pages(pages: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
@@ -445,8 +497,6 @@ def fusemax_decode_paged(
     b, hq, p, e = q.shape
     n_pages, page_size, hkv, f = v_pages.shape
     w = block_table.shape[1]
-    if p != 1:
-        raise ValueError("decode expects exactly one query token")
     group = hq // hkv
     scale = scale if scale is not None else 1.0 / (e ** 0.5)
 
@@ -455,7 +505,8 @@ def fusemax_decode_paged(
 
     if impl in ("jnp", "ref"):
         # gather through the table, then delegate: same shapes, same
-        # autotuned splits, same arithmetic as the dense layout
+        # autotuned splits, same arithmetic as the dense layout (P > 1 —
+        # the speculative verify chain — rides the same delegation)
         cap = w * page_size if capacity is None else capacity
         k = jnp.moveaxis(gather_pages(k_pages, block_table), 2, 1)
         v = jnp.moveaxis(gather_pages(v_pages, block_table), 2, 1)
@@ -479,15 +530,17 @@ def fusemax_decode_paged(
     block_k = min(block_k, page_size)
     while page_size % block_k:
         block_k -= 1
+    block_k = autotune.verify_block_k(
+        block_k, p=p, g=max(group, 8), e=e, f=f)
 
     interpret = (not _on_tpu()) if interpret is None else interpret
     out = fusemax_decode_paged_pallas(
         _fold_decode_q(q, b, hkv, group, e), k_pages, v_pages,
         block_table, kv_len,
         scale=scale, softcap=softcap, hkv=hkv, splits=splits,
-        block_k=block_k, exp_impl=exp_impl, interpret=interpret,
+        block_k=block_k, exp_impl=exp_impl, interpret=interpret, p=p,
     )
-    return _unfold_decode_out(out, b, hkv, group, f)
+    return _unfold_decode_out(out, b, hkv, group, f, p=p)
 
 
 def mla_decode_partials(
@@ -551,6 +604,57 @@ def mla_combine_partials(pm, pl_, pnv, dtype) -> jnp.ndarray:
     return (rnv / rd[..., None])[:, :, None].astype(dtype)
 
 
+def mla_verify_partials(
+    q_cat: jnp.ndarray,     # [B, H, P, rank + rope_dim] absorbed + rope q
+    ckv: jnp.ndarray,       # [B, T, rank] latent history (gathered view)
+    krope: jnp.ndarray,     # [B, T, rope_dim] positional-key history
+    kv_len: jnp.ndarray,    # [B] lengths *including draft position 0*
+    *,
+    start_page,
+    n_splits: int,
+    page_size: int,
+    scale: float,
+    softcap: Optional[float] = None,
+):
+    """Multi-query (draft-chain verify) variant of
+    :func:`mla_decode_partials`: chain position ``j`` attends to latents
+    ``< kv_len + j``.  Same per-page split structure and reduction order
+    with P as a free batch axis, so each position matches the P = 1 path
+    bit-for-bit.  Returns ([B, n, H, P], [B, n, H, P], [B, n, H, P, r])."""
+    p = q_cat.shape[2]
+    qp = q_cat.astype(jnp.float32)                          # [B, H, P, e]
+    k3 = jnp.concatenate([ckv, krope], axis=-1).astype(jnp.float32)
+    v3 = ckv.astype(jnp.float32)
+    lim = kv_len[:, None] + jnp.arange(p)[None, :]          # [B, P]
+    pms, pls, pnvs = [], [], []
+    for j in range(n_splits):
+        lo = (start_page + j) * page_size
+        kt = jax.lax.dynamic_slice_in_dim(k3, lo, page_size, axis=1)
+        vt = jax.lax.dynamic_slice_in_dim(v3, lo, page_size, axis=1)
+        logits = jnp.einsum("bhpe,bme->bhpm", qp, kt) * scale
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        kpos = lo + jnp.arange(page_size)
+        ok = kpos[None, None] < lim[:, :, None]             # [B, P, ps]
+        logits = jnp.where(ok[:, None], logits, NEG_INF)
+        lm = jnp.max(logits, axis=-1)                       # [B, H, P]
+        sln = jnp.exp(logits - lm[..., None])
+        pms.append(lm)
+        pls.append(jnp.sum(sln, axis=-1))
+        pnvs.append(jnp.einsum("bhpm,bmf->bhpf", sln, vt))
+    return jnp.stack(pms, 1), jnp.stack(pls, 1), jnp.stack(pnvs, 1)
+
+
+def mla_verify_combine(pm, pl_, pnv, dtype) -> jnp.ndarray:
+    """Combine :func:`mla_verify_partials` stacks → [B, H, P, rank]."""
+    gm = jnp.max(pm, axis=1, keepdims=True)
+    cf = jnp.exp(pm - gm)                                   # [B, S, H, P]
+    rd = jnp.sum(pl_ * cf, axis=1)                          # [B, H, P]
+    rnv = jnp.sum(pnv * cf[..., None], axis=1)              # [B, H, P, r]
+    rd = jnp.where(rd == 0.0, 1.0, rd)
+    return (rnv / rd[..., None]).astype(dtype)
+
+
 def fusemax_mla_decode_paged(
     q: jnp.ndarray,             # [B, H, 1, rank + rope_dim] absorbed q_cat
     ckv_pages: jnp.ndarray,     # [P, page_size, rank]
@@ -586,8 +690,6 @@ def fusemax_mla_decode_paged(
     n_pages, page_size, rank = ckv_pages.shape
     rope_dim = krope_pages.shape[-1]
     w = block_table.shape[1]
-    if p != 1:
-        raise ValueError("decode expects exactly one query token")
     if e != rank + rope_dim:
         raise ValueError(f"q last dim {e} != rank {rank} + rope {rope_dim}")
     scale = scale if scale is not None else 1.0 / (e ** 0.5)
@@ -603,10 +705,15 @@ def fusemax_mla_decode_paged(
             v = ckv[:, None]
             return fusemax_decode(
                 q, k, v, kv_len, softcap=softcap, scale=scale, impl="ref")
-        pm, pl_, pnv = mla_decode_partials(
+        if p == 1:
+            pm, pl_, pnv = mla_decode_partials(
+                q, ckv, kr, kv_len, start_page=0, n_splits=w,
+                page_size=page_size, scale=scale, softcap=softcap)
+            return mla_combine_partials(pm, pl_, pnv, q.dtype)
+        pm, pl_, pnv = mla_verify_partials(
             q, ckv, kr, kv_len, start_page=0, n_splits=w,
             page_size=page_size, scale=scale, softcap=softcap)
-        return mla_combine_partials(pm, pl_, pnv, q.dtype)
+        return mla_verify_combine(pm, pl_, pnv, q.dtype)
 
     if impl != "pallas":
         raise ValueError(f"unknown impl: {impl}")
@@ -623,15 +730,17 @@ def fusemax_mla_decode_paged(
     block_k = min(block_k, page_size)
     while page_size % block_k:
         block_k -= 1
+    block_k = autotune.verify_block_k(
+        block_k, p=p, g=max(hq, 8), e=rank + rope_dim, f=rank)
 
     interpret = (not _on_tpu()) if interpret is None else interpret
     out = fusemax_mla_decode_paged_pallas(
         _fold_decode_q(q, b, 1, hq, e), ckv_pages, krope_pages,
         block_table, kv_len,
         scale=scale, softcap=softcap, splits=splits, block_k=block_k,
-        exp_impl=exp_impl, interpret=interpret,
+        exp_impl=exp_impl, interpret=interpret, p=p,
     )
-    return _unfold_decode_out(out, b, 1, hq, rank)
+    return _unfold_decode_out(out, b, 1, hq, rank, p=p)
 
 
 def fusemax_decode(
@@ -649,15 +758,22 @@ def fusemax_decode(
     exp_impl: str = "native",
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """Single-token decode against a ragged KV cache (split-K FuseMax).
+    """Decode against a ragged KV cache (split-K FuseMax).
 
-    ``splits`` / ``block_k`` left as ``None`` are resolved by the
-    autotuner per (cache length, backend).
+    P = 1 is the plain decode step.  P > 1 is the speculative *verify*
+    dispatch: the P queries are a draft chain occupying logical positions
+    ``kv_len - 1 + j`` (``kv_len`` includes query 0) and each attends
+    causally to keys ``< kv_len + j``.  ``splits`` / ``block_k`` left as
+    ``None`` are resolved by the autotuner per (cache length, backend) —
+    the key never sees P, so verify inherits exactly the split geometry
+    of single-token decode and per-position outputs are bit-identical.
     """
     b, hq, p, e = q.shape
     _, hkv, m, f = v.shape
-    if p != 1:
-        raise ValueError("decode expects exactly one query token")
+    if p != 1 and window is not None:
+        raise ValueError(
+            "multi-query verify does not support windowed attention "
+            "(draft positions would need per-query ring views)")
     group = hq // hkv
     scale = scale if scale is not None else 1.0 / (e ** 0.5)
 
@@ -674,16 +790,30 @@ def fusemax_decode(
         splits -= 1
 
     if impl == "ref":
-        return _ref.decode_reference(
-            q, k, v, kv_len, softcap=softcap, window=window, scale=scale)
+        if p == 1:
+            return _ref.decode_reference(
+                q, k, v, kv_len, softcap=softcap, window=window,
+                scale=scale)
+        # k-step oracle: each chain position is an independent one-token
+        # decode at its own effective length
+        outs = [_ref.decode_reference(
+                    q[:, :, j:j + 1], k, v, kv_len + j,
+                    softcap=softcap, window=window, scale=scale)
+                for j in range(p)]
+        return jnp.concatenate(outs, axis=2)
     if impl == "jnp":
-        return _decode_splitk_jnp(
-            q, k, v, kv_len, scale=scale, softcap=softcap, window=window,
-            splits=splits)
+        if p == 1:
+            return _decode_splitk_jnp(
+                q, k, v, kv_len, scale=scale, softcap=softcap,
+                window=window, splits=splits)
+        return _verify_splitk_jnp(
+            q, k, v, kv_len, scale=scale, softcap=softcap, splits=splits)
     if impl != "pallas":
         raise ValueError(f"unknown impl: {impl}")
 
     interpret = (not _on_tpu()) if interpret is None else interpret
+    block_k = autotune.verify_block_k(
+        block_k, p=p, g=max(group, 8), e=e, f=f)
     out = fusemax_decode_pallas(
         _fold_decode_q(q, b, hkv, group, e),
         k.reshape(b * hkv, m, e),
@@ -691,6 +821,6 @@ def fusemax_decode(
         kv_len,
         scale=scale, softcap=softcap, window=window, hkv=hkv,
         splits=splits, block_k=block_k, exp_impl=exp_impl,
-        interpret=interpret,
+        interpret=interpret, p=p,
     )
-    return _unfold_decode_out(out, b, hkv, group, f)
+    return _unfold_decode_out(out, b, hkv, group, f, p=p)

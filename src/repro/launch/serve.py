@@ -26,6 +26,20 @@ the prefix cache disabled.
 single-device greedy streams and ``memory.sharding.per_device`` reports
 the 1/tp residency.  On CPU set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
+``--speculate k`` turns on speculative decoding (greedy-only): the
+engine's n-gram proposer drafts k tokens per slot and a single fused
+verify dispatch scores the whole chain (see
+:mod:`repro.serving.speculate`).  Every requested layout then serves the
+trace speculatively, one extra ``<layout>_nospec`` leg serves it without
+speculation on the *identical* trace for the speedup ratio, and
+outputs_match asserts the greedy streams are bit-identical either way.
+``--duplicates N`` appends N duplicate requests (cycling over the
+originals) to the trace — the popular/repeated-query traffic where
+cross-request drafting shines: a duplicate whose original already
+completed drafts from the original's indexed stream and verifies
+near-perfectly.  The proposer's n-gram table is cleared between
+``--repeats`` (like the prefix index) so a warm table can't memorize the
+re-served trace and report fake acceptance.
 """
 from __future__ import annotations
 
@@ -85,7 +99,8 @@ def _parse_mesh(arg: Optional[str]):
 
 
 def _serve_one_layout(args, cfg, params, rt, layout: str,
-                      prefix_caching: bool = True, mesh=None) -> dict:
+                      prefix_caching: bool = True, mesh=None,
+                      speculate: Optional[int] = None) -> dict:
     engine = ServeEngine(cfg, params, slots=args.slots,
                          max_len=args.max_len, rt=rt,
                          temperature=args.temperature,
@@ -95,6 +110,7 @@ def _serve_one_layout(args, cfg, params, rt, layout: str,
                          page_size=args.page_size,
                          num_pages=args.num_pages,
                          prefix_caching=prefix_caching,
+                         speculate=speculate,
                          mesh=mesh)
     lens = _trace_lens(args)
     warmup_s = None
@@ -114,6 +130,12 @@ def _serve_one_layout(args, cfg, params, rt, layout: str,
         # tail-offset jit keys still compile only once, in run 1, so the
         # median of ≥ 3 repeats excludes the compile cost)
         engine.clear_prefix_cache()
+        if engine.proposer is not None:
+            # same trap as the prefix index: a warm n-gram table would
+            # absorb runs 2..N of the identical trace and report
+            # same-trace-rerun acceptance instead of the advertised
+            # duplicate-traffic acceptance
+            engine.proposer.clear()
         rng = np.random.default_rng(args.seed)
         sp = args.shared_prefix_len
         shared = rng.integers(0, cfg.vocab, size=(sp,)) if sp else None
@@ -128,6 +150,15 @@ def _serve_one_layout(args, cfg, params, rt, layout: str,
                           max_new_tokens=args.new_tokens)
             reqs.append(req)
             engine.submit(req)
+        for j in range(getattr(args, "duplicates", 0) or 0):
+            # duplicate traffic: resend earlier prompts verbatim (FIFO
+            # admission means a duplicate typically enters after its
+            # original completed — the cross-request drafting workload)
+            src = reqs[j % len(lens)]
+            req = Request(rid=len(lens) + j, prompt=src.prompt.copy(),
+                          max_new_tokens=args.new_tokens)
+            reqs.append(req)
+            engine.submit(req)
         engine.run()
         runs.append((time.perf_counter() - t0, dict(engine.stats), reqs))
     runs.sort(key=lambda r: r[0])
@@ -135,9 +166,9 @@ def _serve_one_layout(args, cfg, params, rt, layout: str,
     engine.stats.update(stats)
 
     total_new = sum(len(r.generated) for r in reqs)
-    prompt_tokens = sum(lens)
+    prompt_tokens = sum(len(r.prompt) for r in reqs)
     ttfts = [r.ttft for r in reqs if r.ttft is not None]
-    return {
+    out = {
         "cache_layout": layout,
         "prefix_caching": prefix_caching and engine.kv is not None
             and engine.kv.prefix_enabled,
@@ -173,6 +204,23 @@ def _serve_one_layout(args, cfg, params, rt, layout: str,
         "memory": engine.memory_stats(),
         "_outputs": [list(r.generated) for r in reqs],
     }
+    if engine.spec_k is not None:
+        out["speculation"] = {
+            "k": engine.spec_k,
+            "dispatches": stats["spec_dispatches"],
+            "proposed": stats["spec_proposed"],
+            "accepted": stats["spec_accepted"],
+            "accept_rate": round(
+                stats["spec_accepted"] / max(1, stats["spec_proposed"]),
+                3),
+            # committed tokens per model evaluation (every decode
+            # dispatch, spec or not, is one evaluation) — the number
+            # that has to beat 1.0 for speculation to pay
+            "accepted_per_dispatch": round(
+                stats["tokens_decoded"] /
+                max(1, stats["decode_dispatches"]), 3),
+        }
+    return out
 
 
 def serve_bench(args) -> dict:
@@ -187,16 +235,43 @@ def serve_bench(args) -> dict:
     if mesh is not None and "paged" not in layouts:
         raise SystemExit("--mesh shards the paged pool; add "
                          "--cache-layout paged (or both)")
+    spec = None if getattr(args, "no_speculate", False) \
+        else getattr(args, "speculate", None)
+    if spec is not None:
+        from repro.serving.engine import speculation_supported
+        if args.temperature > 0:
+            raise SystemExit("--speculate is greedy-only: the accept rule "
+                             "reproduces the non-speculative stream only "
+                             "at temperature 0")
+        if mesh is not None:
+            raise SystemExit("--speculate does not combine with --mesh "
+                             "(the verify kernels run unsharded)")
+        if not speculation_supported(cfg):
+            raise SystemExit(
+                f"--speculate unsupported for {args.arch}: needs every "
+                f"layer to be global GQA/MLA attention + dense MLP")
     per_layout = {lo: _serve_one_layout(
         args, cfg, params, rt, lo,
-        prefix_caching=not args.no_prefix_cache) for lo in layouts}
+        prefix_caching=not args.no_prefix_cache,
+        speculate=spec) for lo in layouts}
     if args.shared_prefix_len and "paged" in layouts \
             and not args.no_prefix_cache:
         # shared-prefix trace mode: A/B the paged layout with the prefix
         # cache disabled too — greedy streams must be identical either way
         per_layout["paged_noprefix"] = _serve_one_layout(
-            args, cfg, params, rt, "paged", prefix_caching=False)
+            args, cfg, params, rt, "paged", prefix_caching=False,
+            speculate=spec)
         layouts = layouts + ["paged_noprefix"]
+    if spec is not None:
+        # speculation A/B: serve the identical trace once more WITHOUT
+        # speculation on the primary paged layout — outputs_match then
+        # asserts spec == non-spec greedy streams, and the tok/s ratio is
+        # the honest speedup (same trace, same layout, same warmup)
+        base_lo = "paged" if "paged" in layouts else layouts[0]
+        per_layout[base_lo + "_nospec"] = _serve_one_layout(
+            args, cfg, params, rt, base_lo,
+            prefix_caching=not args.no_prefix_cache)
+        layouts = layouts + [base_lo + "_nospec"]
     if mesh is not None:
         # device-sharded pool: serve the identical trace once more with
         # the pool partitioned over the mesh — outputs_match then covers
@@ -233,6 +308,15 @@ def serve_bench(args) -> dict:
         d, p = per_layout["dense"], per_layout["paged"]
         metrics["paged_vs_dense_tok_per_s"] = round(
             p["tok_per_s"] / max(d["tok_per_s"], 1e-9), 3)
+    if spec is not None:
+        base_lo = "paged" if "paged" in per_layout else layouts[0]
+        metrics["duplicates"] = getattr(args, "duplicates", 0) or 0
+        metrics["speculation"] = dict(
+            per_layout[base_lo]["speculation"],
+            spec_vs_base_tok_per_s=round(
+                per_layout[base_lo]["tok_per_s"] /
+                max(per_layout[base_lo + "_nospec"]["tok_per_s"], 1e-9),
+                3))
     if mesh is not None:
         metrics["mesh"] = {"tp": int(mesh.shape["model"]),
                            "axes": list(mesh.axis_names)}
@@ -282,6 +366,20 @@ def main(argv=None) -> dict:
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable automatic prefix caching on the paged "
                          "layout")
+    ap.add_argument("--speculate", type=int, default=None, metavar="K",
+                    help="speculative decoding (greedy-only): draft K "
+                         "tokens per slot via the n-gram proposer and "
+                         "verify the whole chain in one fused dispatch; "
+                         "adds a '<layout>_nospec' leg on the identical "
+                         "trace for the speedup ratio and extends "
+                         "outputs_match to spec vs non-spec")
+    ap.add_argument("--no-speculate", action="store_true",
+                    help="force speculation off (overrides --speculate)")
+    ap.add_argument("--duplicates", type=int, default=0, metavar="N",
+                    help="trace mode: append N duplicate requests "
+                         "(cycling over the originals) — the "
+                         "popular-query traffic where cross-request "
+                         "drafting gets real acceptance")
     ap.add_argument("--mesh", default=None,
                     help="shard the paged pool across devices: tp=N "
                          "partitions every page array's kv-head / "
@@ -337,6 +435,13 @@ def main(argv=None) -> dict:
               f"{metrics['outputs_match']}"
               + (f" (paged/dense tok/s = {ratio})" if ratio is not None
                  else ""))
+    sp = metrics.get("speculation")
+    if sp:
+        print(f"  speculation k={sp['k']}: accept rate "
+              f"{sp['accept_rate']} ({sp['accepted']}/{sp['proposed']} "
+              f"drafts), {sp['accepted_per_dispatch']} committed "
+              f"tokens/dispatch, spec/base tok/s = "
+              f"{sp['spec_vs_base_tok_per_s']}")
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(metrics, fh, indent=1)

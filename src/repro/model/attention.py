@@ -531,6 +531,76 @@ def gqa_decode_paged(
     return y, {"k_pages": k_pages, "v_pages": v_pages}
 
 
+def gqa_verify(
+    p, x: jnp.ndarray, cache: dict, kv_len: jnp.ndarray,
+    span: jnp.ndarray, cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
+) -> tuple[jnp.ndarray, dict]:
+    """Speculative verify: score a P-token draft chain in one dispatch.
+
+    x: [B, P, d] — position j of the chain sits at absolute position
+    ``kv_len - 1 + j`` (``kv_len`` counts the cache *including* chain
+    position 0, exactly as :func:`gqa_decode`'s contract).  ``span``: [B]
+    number of real chain positions per row — K/V writes beyond it drop,
+    so rejected drafts never pollute the cache, and outputs beyond it
+    are garbage the engine ignores.  Global attention only (the engine
+    gates speculation off for windowed layers)."""
+    b, pq, _ = x.shape
+    pos = (kv_len - 1)[:, None] + jnp.arange(pq)[None]   # [B, P] absolute
+    q, k_new, v_new = _proj_qkv(p, x, cfg, pos, rt)      # [B, H*, P, dh]
+
+    slots = cache["k"].shape[2]
+    valid = jnp.arange(pq)[None] < span[:, None]
+    slot_idx = jnp.where(valid, pos, slots)              # OOB → dropped
+    bidx = jnp.arange(b)[:, None]
+    k_cache = cache["k"].at[bidx, :, slot_idx].set(
+        jnp.moveaxis(k_new, 1, 2), mode="drop")
+    v_cache = cache["v"].at[bidx, :, slot_idx].set(
+        jnp.moveaxis(v_new, 1, 2), mode="drop")
+
+    out = fusemax_decode(
+        q, k_cache, v_cache, kv_len,
+        softcap=cfg.attn_softcap,
+        impl=rt.attn_impl,
+        splits=rt.decode_splits,
+        exp_impl=rt.exp_impl,
+        interpret=rt.interpret,
+    )                                                    # [B, H, P, dh]
+    y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def gqa_verify_paged(
+    p, x: jnp.ndarray, cache: dict, bt_rows: jnp.ndarray,
+    kv_len: jnp.ndarray, span: jnp.ndarray,
+    cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
+) -> tuple[jnp.ndarray, dict]:
+    """Paged :func:`gqa_verify`: chain K/V lands through the block table
+    (the tail rows are the slot's scratch draft pages — see
+    ``PagedKVCache.reserve_draft``), the verify kernel reads back through
+    the same table.  Unsharded only (the engine gates speculation off
+    under a device mesh)."""
+    b, pq, _ = x.shape
+    pos = (kv_len - 1)[:, None] + jnp.arange(pq)[None]   # [B, P]
+    q, k_new, v_new = _proj_qkv(p, x, cfg, pos, rt)      # [B, H*, P, dh]
+    cap = _gqa_capacity(cache, bt_rows, spec)
+    valid = (jnp.arange(pq)[None] < span[:, None]) & (kv_len > 0)[:, None]
+
+    k_pages = write_pages(cache["k_pages"], bt_rows, pos,
+                          jnp.moveaxis(k_new, 1, 2), cap, valid)
+    v_pages = write_pages(cache["v_pages"], bt_rows, pos,
+                          jnp.moveaxis(v_new, 1, 2), cap, valid)
+    out = fusemax_decode_paged(
+        q, k_pages, v_pages, bt_rows, kv_len,
+        softcap=cfg.attn_softcap,
+        impl=rt.attn_impl,
+        splits=rt.decode_splits,
+        exp_impl=rt.exp_impl,
+        interpret=rt.interpret,
+    )                                                    # [B, H, P, dh]
+    y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
+    return y, {"k_pages": k_pages, "v_pages": v_pages}
+
+
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek multi-head latent attention)
 # ---------------------------------------------------------------------------
@@ -728,6 +798,44 @@ def mla_decode(
     return y, {"ckv": ckv, "krope": krope}
 
 
+def mla_verify(
+    p, x: jnp.ndarray, cache: dict, kv_len: jnp.ndarray,
+    span: jnp.ndarray, cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
+) -> tuple[jnp.ndarray, dict]:
+    """Speculative verify in latent space: the P-chain analogue of
+    :func:`mla_decode` (see :func:`gqa_verify` for the chain contract)."""
+    m = cfg.mla
+    b, pq, _ = x.shape
+    dt = x.dtype
+    pos = (kv_len - 1)[:, None] + jnp.arange(pq)[None]   # [B, P]
+    q_nope, q_rope, ckv_new, krope_new = _mla_qkv_latent(p, x, cfg, pos)
+
+    slots = cache["ckv"].shape[1]
+    valid = jnp.arange(pq)[None] < span[:, None]
+    slot_idx = jnp.where(valid, pos, slots)              # OOB → dropped
+    bidx = jnp.arange(b)[:, None]
+    ckv = cache["ckv"].at[bidx, slot_idx].set(ckv_new, mode="drop")
+    krope = cache["krope"].at[bidx, slot_idx].set(krope_new, mode="drop")
+
+    q_eff = jnp.einsum("bhse,rhe->bhsr", q_nope, p["w_uk"].astype(dt))
+    q_cat = jnp.concatenate([q_eff, q_rope], axis=-1)    # [B,H,P,r+rd]
+    k_cat = jnp.concatenate([ckv, krope], axis=-1)[:, None]  # [B,1,M,r+rd]
+    v_lat = ckv[:, None]                                 # [B,1,M,r]
+
+    out_lat = fusemax_decode(
+        q_cat, k_cat, v_lat, kv_len,
+        scale=1.0 / math.sqrt(m.nope_dim + m.rope_dim),
+        softcap=cfg.attn_softcap,
+        impl=rt.attn_impl,
+        splits=rt.decode_splits,
+        exp_impl=rt.exp_impl,
+        interpret=rt.interpret,
+    )                                                    # [B,H,P,r]
+    out = jnp.einsum("bhsr,rhe->bhse", out_lat, p["w_uv"].astype(dt))
+    y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(dt))
+    return y, {"ckv": ckv, "krope": krope}
+
+
 # ---------------------------------------------------------------------------
 # MLA — paged cache variants
 # ---------------------------------------------------------------------------
@@ -898,6 +1006,45 @@ def mla_decode_paged(
             exp_impl=rt.exp_impl,
             interpret=rt.interpret,
         )                                                # [B,H,1,r]
+    out = jnp.einsum("bhsr,rhe->bhse", out_lat, p["w_uv"].astype(dt))
+    y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(dt))
+    return y, {"ckv_pages": ckv_pages, "krope_pages": krope_pages}
+
+
+def mla_verify_paged(
+    p, x: jnp.ndarray, cache: dict, bt_rows: jnp.ndarray,
+    kv_len: jnp.ndarray, span: jnp.ndarray,
+    cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
+) -> tuple[jnp.ndarray, dict]:
+    """Paged latent-space verify: the P-chain analogue of
+    :func:`mla_decode_paged` (chain contract in :func:`gqa_verify`;
+    chain latents land in the slot's scratch draft pages through the
+    block table).  Unsharded only — the engine gates speculation off
+    under a device mesh."""
+    m = cfg.mla
+    b, pq, _ = x.shape
+    dt = x.dtype
+    pos = (kv_len - 1)[:, None] + jnp.arange(pq)[None]   # [B, P]
+    q_nope, q_rope, ckv_new, krope_new = _mla_qkv_latent(p, x, cfg, pos)
+    page_size = cache["ckv_pages"].shape[1]
+    cap = bt_rows.shape[1] * page_size
+    valid = (jnp.arange(pq)[None] < span[:, None]) & (kv_len > 0)[:, None]
+    scale = 1.0 / math.sqrt(m.nope_dim + m.rope_dim)
+
+    q_eff = jnp.einsum("bhse,rhe->bhsr", q_nope, p["w_uk"].astype(dt))
+    q_cat = jnp.concatenate([q_eff, q_rope], axis=-1)    # [B,H,P,r+rd]
+
+    ckv_pages = write_pages(cache["ckv_pages"], bt_rows, pos, ckv_new,
+                            cap, valid)
+    krope_pages = write_pages(cache["krope_pages"], bt_rows, pos,
+                              krope_new, cap, valid)
+    out_lat = fusemax_mla_decode_paged(
+        q_cat, ckv_pages, krope_pages, bt_rows, kv_len,
+        scale=scale, softcap=cfg.attn_softcap,
+        impl=rt.attn_impl,
+        exp_impl=rt.exp_impl,
+        interpret=rt.interpret,
+    )                                                    # [B,H,P,r]
     out = jnp.einsum("bhsr,rhe->bhse", out_lat, p["w_uv"].astype(dt))
     y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(dt))
     return y, {"ckv_pages": ckv_pages, "krope_pages": krope_pages}

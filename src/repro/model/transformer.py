@@ -181,6 +181,51 @@ def layer_decode(p, x, cache, kv_len, cfg: ModelConfig, spec: LayerSpec,
     return x, new_cache
 
 
+def layer_verify(p, x, cache, kv_len, span, cfg: ModelConfig,
+                 spec: LayerSpec, rt: Runtime,
+                 block_tables: Optional[dict] = None):
+    """P-position speculative verify through one layer (the chain
+    analogue of :func:`layer_decode`; x: [B, P, d]).  Attention-only:
+    SSM layers carry recurrent state that cannot be rolled back by page
+    surgery, so the engine never enables speculation for them."""
+    if spec.ssm is not None:
+        raise ValueError("speculative verify does not support SSM layers")
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    new_cache = dict(cache)
+    if spec.attn == "gqa":
+        if block_tables is not None:
+            y, new_cache["attn"] = attn_mod.gqa_verify_paged(
+                p["attn"], h, cache["attn"],
+                block_tables[attn_mod.paged_cache_key(spec)], kv_len, span,
+                cfg, spec, rt)
+        else:
+            y, new_cache["attn"] = attn_mod.gqa_verify(
+                p["attn"], h, cache["attn"], kv_len, span, cfg, spec, rt)
+    elif spec.attn == "mla":
+        if block_tables is not None:
+            y, new_cache["attn"] = attn_mod.mla_verify_paged(
+                p["attn"], h, cache["attn"], block_tables["full"], kv_len,
+                span, cfg, spec, rt)
+        else:
+            y, new_cache["attn"] = attn_mod.mla_verify(
+                p["attn"], h, cache["attn"], kv_len, span, cfg, spec, rt)
+    else:
+        raise ValueError(f"layer has no attention to verify: {spec}")
+    if "post1" in p:
+        y = apply_norm(p["post1"], y, cfg.norm)
+    x = x + y
+    if spec.mlp != "none":
+        h2 = apply_norm(p["ln2"], x, cfg.norm)
+        if spec.mlp == "dense":
+            y2 = mlp(p["mlp"], h2, cfg.mlp_act, rt)
+        else:
+            y2 = moe_mod.moe_ffn(p["moe"], h2, cfg, rt)
+        if "post2" in p:
+            y2 = apply_norm(p["post2"], y2, cfg.norm)
+        x = x + y2
+    return x, new_cache
+
+
 # ---------------------------------------------------------------------------
 # Model
 # ---------------------------------------------------------------------------
@@ -526,6 +571,123 @@ def decode_step(cfg: ModelConfig, params, token_or_embed, caches,
     logits = rt.shard_activation(logits, ("batch", "vocab"))
     logits = softcap(logits, cfg.final_softcap)
     return logits, new_caches
+
+
+def verify_step(cfg: ModelConfig, params, tokens, caches,
+                kv_len: jnp.ndarray, span: jnp.ndarray,
+                rt: Runtime = Runtime(),
+                block_tables: Optional[dict] = None):
+    """Score a P-token draft chain in one fused dispatch.
+
+    tokens: [B, P] int — chain position 0 is the model's own next token
+    (the base decode step), positions 1..P-1 the speculative drafts.
+    kv_len: [B] cache length *including* chain position 0; position j
+    occupies kv_len - 1 + j and attends causally to keys < kv_len + j.
+    span: [B] real chain positions per row (writes/outputs beyond it are
+    dropped/ignored).  Returns (logits [B, P, vocab], new_caches) —
+    logits[:, j] is what :func:`decode_step` would return after
+    committing the chain prefix tokens[:, :j+1]: the attention reads are
+    bit-exact vs the single-token kernels (same split geometry; see
+    ``kernels.ops.fusemax_decode``), and the surrounding [B, P, d]
+    projection/MLP matmuls match the [B, 1, d] path to float32
+    reduction-order tolerance — greedy argmax, which is all the accept
+    rule consumes, agrees (asserted end-to-end across layouts in
+    ``tests/test_speculative.py``)."""
+    batch = {"inputs": tokens}
+    x = _embed_inputs(cfg, params, batch, rt)
+    new_caches = []
+    for (pattern, reps), p_run, cache in zip(cfg.runs(), params["runs"],
+                                             caches):
+        if reps == 1:
+            cs = []
+            for spec_j, p_j, c_j in zip(pattern, p_run, cache):
+                x, c_new = layer_verify(p_j, x, c_j, kv_len, span, cfg,
+                                        spec_j, rt, block_tables)
+                cs.append(c_new)
+            new_caches.append(cs)
+            continue
+
+        if rt.unroll_runs:
+            outs = [[] for _ in pattern]
+            for i in range(reps):
+                for j, (spec_j, p_j, c_j) in enumerate(
+                        zip(pattern, p_run, cache)):
+                    p_i = jax.tree.map(lambda a: a[i], p_j)
+                    c_i = jax.tree.map(lambda a: a[i], c_j)
+                    x, c_new = layer_verify(p_i, x, c_i, kv_len, span, cfg,
+                                            spec_j, rt, block_tables)
+                    outs[j].append(c_new)
+            new_caches.append([
+                jax.tree.map(lambda *xs: jnp.stack(xs), *o) for o in outs])
+            continue
+
+        def body(h, pc):
+            ps, cs_in = pc
+            cs_out = []
+            for spec_j, p_j, c_j in zip(pattern, ps, cs_in):
+                h, c_new = layer_verify(p_j, h, c_j, kv_len, span, cfg,
+                                        spec_j, rt, block_tables)
+                cs_out.append(c_new)
+            return h, tuple(cs_out)
+
+        x, c = jax.lax.scan(body, x, (tuple(p_run), tuple(cache)))
+        new_caches.append(list(c))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(head, x)                            # [B, P, vocab]
+    logits = rt.shard_activation(logits, ("batch", "seq", "vocab"))
+    logits = softcap(logits, cfg.final_softcap)
+    return logits, new_caches
+
+
+def speculative_step(cfg: ModelConfig, params, last_logits, drafts, caches,
+                     kv_len: jnp.ndarray, remaining: jnp.ndarray,
+                     rt: Runtime = Runtime(),
+                     block_tables: Optional[dict] = None):
+    """One fused speculate→verify→accept step (greedy).
+
+    last_logits: [B, vocab] — each slot's logits over its last committed
+    token (the base loop's sampling state).  drafts: [B, P-1] proposer
+    guesses for the tokens *after* the model's next one.  kv_len: [B]
+    committed lengths (NOT counting the to-be-committed next token);
+    remaining: [B] tokens each slot may still emit (0 = spent).
+
+    The chain fed to :func:`verify_step` is [argmax(last_logits), drafts]
+    — position 0 is the ordinary decode step, so even a fully rejected
+    draft commits one token and the loop always advances.  A draft prefix
+    is accepted while each draft equals the argmax of the *previous*
+    position's verify logits; by induction the committed stream is
+    bit-identical to running :func:`decode_step` token by token (verify
+    logits match the single-token path bit-for-bit on the jnp kernels,
+    and every committed token is still the model's own argmax).
+
+    Returns (tokens [P, B], advance [B], kv_len, remaining, last_logits,
+    new_caches): ``tokens[:advance[i], i]`` is slot i's committed chain;
+    post-state equals ``advance[i]`` iterations of the base loop."""
+    b, vocab = last_logits.shape
+    p_minus_1 = drafts.shape[1]
+    p_total = p_minus_1 + 1
+    active = remaining > 0
+    nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    nxt = jnp.where(active, nxt, 0)
+    fed = jnp.concatenate([nxt[:, None], drafts.astype(jnp.int32)], axis=1)
+    span = jnp.where(active, jnp.minimum(p_total, remaining), 0)
+    kv0 = kv_len + active.astype(kv_len.dtype)           # incl. position 0
+
+    logits, new_caches = verify_step(
+        cfg, params, fed, caches, kv0, span, rt, block_tables)
+
+    guess = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # [B, P]
+    ok = (fed[:, 1:] == guess[:, :-1]) & \
+        (jnp.arange(1, p_total)[None] < span[:, None])
+    acc = jnp.cumprod(ok.astype(jnp.int32), axis=1)
+    advance = jnp.where(active, 1 + acc.sum(axis=1), 0)
+
+    new_last = logits[jnp.arange(b), jnp.maximum(advance - 1, 0)]
+    last_logits = jnp.where(active[:, None], new_last, last_logits)
+    kv_len = kv_len + advance.astype(kv_len.dtype)
+    remaining = remaining - advance.astype(remaining.dtype)
+    return (fed.T, advance, kv_len, remaining, last_logits, new_caches)
 
 
 def prefill(cfg: ModelConfig, params, batch: dict, caches,

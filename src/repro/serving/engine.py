@@ -52,6 +52,15 @@ The hot path is device-resident end-to-end:
     loop-invariant on device.
   * Host work per decode dispatch is one small transfer (the [N, slots]
     token block) plus queue/free-list bookkeeping.
+  * **Speculative decoding** (``speculate=k``, greedy-only) — a
+    model-free n-gram proposer (:mod:`repro.serving.speculate`) drafts k
+    tokens per slot; ONE verify dispatch scores all k+1 chain positions
+    through the same fused kernels and the accepted prefix commits by
+    block-table surgery (scratch draft pages promote into the slot's
+    owned set, rejected tails drop their refs — no K/V copies, no
+    recompute).  Token streams stay bit-identical to the base loop;
+    ``stats`` reports ``spec_dispatches`` / ``spec_proposed`` /
+    ``spec_accepted``.
 
 Greedy (temperature=0) token streams are bit-identical between the two
 layouts and match the per-token reference path: slots are independent
@@ -90,6 +99,7 @@ from repro.kernels.autotune import next_pow2
 from repro.model import transformer as tf
 from repro.model.layers import Runtime
 from repro.serving.kv_cache import PagedKVCache
+from repro.serving.speculate import NGramProposer
 
 
 def enable_compilation_cache(path: Optional[str] = None) -> Optional[str]:
@@ -160,6 +170,24 @@ def sample_logits(logits: jnp.ndarray, key, temperature: float = 0.0):
     return jax.random.categorical(key, logits / temperature, axis=-1)
 
 
+def speculation_supported(cfg: ModelConfig) -> bool:
+    """True when every layer is global GQA/MLA attention + dense MLP.
+
+    The verify path (:func:`transformer.verify_step`) scores P chain
+    positions against the cache in one dispatch; that requires attention
+    state addressable by absolute position.  Windowed rings hold only a
+    trailing window (a partially-rejected chain would leave phantom ring
+    writes), SSM state is a running summary that cannot roll back, and
+    MoE expert capacity depends on the evaluated chunk length — a P-token
+    verify would route differently than P single-token steps, breaking
+    the bit-identity the accept rule relies on.
+    """
+    return all(s.attn in ("gqa", "mla") and s.window is None
+               and s.mlp == "dense" and s.ssm is None
+               and not s.parallel_ssm
+               for s in cfg.layer_specs())
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -191,6 +219,7 @@ class ServeEngine:
                  page_size: int = 16,
                  num_pages: Optional[int] = None,
                  prefix_caching: bool = True,
+                 speculate: Optional[int] = None,
                  mesh=None, shard_axis: str = "model"):
         if cache_layout not in ("dense", "paged"):
             raise ValueError(f"unknown cache_layout: {cache_layout!r}")
@@ -213,6 +242,34 @@ class ServeEngine:
             # every non-paged op stays bit-identical to the 1-device path
             params = jax.device_put(params, NamedSharding(mesh, P()))
             rt = dataclasses.replace(rt, kv_shard=shard)
+        self.spec_k = None
+        self.proposer = None
+        if speculate is not None:
+            k = int(speculate)
+            if k < 1:
+                raise ValueError(f"need speculate >= 1, got {speculate}")
+            if temperature > 0.0:
+                raise ValueError(
+                    "speculative decoding is greedy-only: the accept rule "
+                    "commits a draft token iff it equals the model's own "
+                    "argmax, which reproduces the non-speculative stream "
+                    "only at temperature=0")
+            if shard is not None:
+                raise ValueError(
+                    "speculative decoding does not support the "
+                    "device-sharded pool (mesh=) — the verify kernels run "
+                    "unsharded; drop mesh= or --speculate")
+            if not speculation_supported(cfg):
+                raise ValueError(
+                    "speculative decoding needs every layer to be global "
+                    "GQA/MLA attention with a dense MLP (no sliding "
+                    "windows, SSM state, or MoE routing — see "
+                    "speculation_supported)")
+            self.spec_k = k
+            # proposer position 0 guesses the model's *next* token; the
+            # verify chain feeds the model's own argmax there, so k drafts
+            # need k+1 proposed positions (propose(...)[1:] is the chain)
+            self.proposer = NGramProposer(k=k + 1)
         self.cfg = cfg
         self.params = params
         self.rt = rt
@@ -255,13 +312,16 @@ class ServeEngine:
         self._last_logits = jnp.zeros((slots, cfg.vocab), jnp.float32)
         self._prefill_fns: dict[tuple, Callable] = {}
         self._loop_fns: dict[int, Callable] = {}
+        self._spec_fns: dict[int, Callable] = {}
         self._admit_seq = 0
         self._order = [0] * slots          # admission sequence per slot
         self.stats = {"prefill_dispatches": 0, "decode_dispatches": 0,
                       "decode_steps": 0, "tokens_decoded": 0,
                       "preemptions": 0, "peak_live_tokens": 0,
                       "prefix_hits": 0, "tokens_reused": 0,
-                      "cow_copies": 0, "tokens_prefilled": 0}
+                      "cow_copies": 0, "tokens_prefilled": 0,
+                      "spec_dispatches": 0, "spec_proposed": 0,
+                      "spec_accepted": 0}
 
     # -- jit caches ---------------------------------------------------------
 
@@ -361,6 +421,30 @@ class ServeEngine:
         self._loop_fns[n_steps] = fn
         return fn
 
+    def _get_spec(self, p_total: int) -> Callable:
+        """Jit'd fused speculate→verify→accept step for a ``p_total``-
+        position chain (see :func:`transformer.speculative_step`); the
+        jit key is the chain width only."""
+        fn = self._spec_fns.get(p_total)
+        if fn is not None:
+            return fn
+        cfg, rt = self.cfg, self.rt
+        if self.kv is not None:
+            def spec(params, last_logits, drafts, caches, kv_len,
+                     remaining, tables):
+                return tf.speculative_step(
+                    cfg, params, last_logits, drafts, caches, kv_len,
+                    remaining, rt, block_tables=tables)
+        else:
+            def spec(params, last_logits, drafts, caches, kv_len,
+                     remaining):
+                return tf.speculative_step(
+                    cfg, params, last_logits, drafts, caches, kv_len,
+                    remaining, rt)
+        fn = jax.jit(spec, donate_argnums=self._donate((1, 3, 4, 5)))
+        self._spec_fns[p_total] = fn
+        return fn
+
     # -- request flow -------------------------------------------------------
 
     def warmup(self, prompt_len: Union[int, Iterable[int]]) -> float:
@@ -435,6 +519,11 @@ class ServeEngine:
             if self.kv is not None:
                 self.kv.clear_prefix()
                 self.kv.reset_peaks()
+            if self.proposer is not None:
+                # drop the dummy streams the warmup traces indexed — real
+                # traffic must not draft from (or get fake acceptance on)
+                # the all-zero warmup prompts
+                self.proposer.clear()
         finally:
             if self.kv is not None:
                 self.kv.prefix_enabled = prefix_was
@@ -502,6 +591,10 @@ class ServeEngine:
             self._admit_seq += 1
             self._order[i] = self._admit_seq
             admitted.append((i, req, tokens, cached, cow_pairs))
+            if self.proposer is not None:
+                # (re-)open the request's draft history with the full
+                # resume stream — preemption replay starts clean
+                self.proposer.begin(req.rid, tokens)
         if not admitted:
             return
         by_group: dict[tuple[int, int], list] = {}
@@ -595,6 +688,14 @@ class ServeEngine:
         act = [i for i, r in enumerate(self.active) if r is not None]
         if not act:
             return
+        if self.spec_k is not None and \
+                all(self.active[i].generated for i in act):
+            # speculative path: one verify dispatch commits up to k+1
+            # tokens per slot.  Falls through to the base loop when the
+            # pool can't back every slot's draft span — _ensure_pages
+            # then applies the usual preemption back-pressure.
+            if self._spec_step(act):
+                return
         if any(not self.active[i].generated for i in act):
             # freshly admitted slot: run a single step first so its first
             # token reaches the host immediately — keeps the reported TTFT
@@ -633,17 +734,111 @@ class ServeEngine:
             if take > 0:
                 if not req.generated and req.ttft is None:
                     req.ttft = now - getattr(req, "_t_submit", now)
-                req.generated.extend(int(t) for t in toks[:take, i])
+                got = [int(t) for t in toks[:take, i]]
+                req.generated.extend(got)
                 self.stats["tokens_decoded"] += take
+                if self.proposer is not None:
+                    self.proposer.extend(req.rid, got)
             if self.remaining[i] <= 0:
                 req.done = True
                 self.active[i] = None
                 self.kv_len[i] = 0
+                if self.proposer is not None:
+                    self.proposer.finish(req.rid)
                 if self.kv is not None:
                     # completion path: hand the slot's full token stream to
                     # release so its full pages are demoted into the
                     # reusable-prefix index instead of freed
                     self.kv.release(i, tokens=self._resume_tokens(req))
+
+    def _spec_step(self, act: list) -> bool:
+        """One fused speculate→verify→accept dispatch: score a k+1-token
+        chain (the model's own next token + the proposer's k drafts) per
+        active slot and commit the accepted prefix.
+
+        Draft K/V lands in scratch tail pages reserved up front
+        (:meth:`PagedKVCache.reserve_draft`); accept is block-table
+        surgery — ``commit_draft`` promotes the scratch pages covering the
+        committed length into the slot's owned set and the rejected tail
+        rolls back by dropping refs, with no K/V copies or recompute.
+        Greedy streams stay bit-identical to the base loop because every
+        committed token is the model's own argmax (see
+        :func:`transformer.speculative_step`).  Returns False — nothing
+        dispatched, nothing left staged — when the pool cannot back every
+        active slot's draft span even after prefix eviction.
+        """
+        k = self.spec_k
+        p_total = k + 1
+        drafts = np.zeros((self.slots, k), np.int32)
+        proposed = np.zeros((self.slots,), np.int64)
+        for i in act:
+            # position 0 of the proposal guesses the model's next token —
+            # the verify chain feeds the model's own argmax there, so the
+            # speculative chain is the tail.  Zero-padding unproposed
+            # positions is safe: a wrong draft just fails the accept rule.
+            d = self.proposer.propose(self.active[i].rid)[1:]
+            n = min(len(d), k)
+            drafts[i, :n] = d[:n]
+            proposed[i] = n
+        if self.kv is not None:
+            staged, pairs, short = [], [], False
+            for i in act:
+                span = int(min(p_total, self.remaining[i]))
+                res = self.kv.reserve_draft(
+                    i, int(self.kv_len[i]), int(self.kv_len[i]) + span)
+                if res is None:
+                    short = True
+                    break
+                staged.append(i)
+                pairs.extend(res)
+            if pairs:
+                # COW pairs stand on their own (the slot's ref already
+                # moved to the copy), so they must apply even when a later
+                # slot's reservation fails and the dispatch is abandoned
+                self.caches = self.kv.apply_cow(self.caches, pairs)
+                self.stats["cow_copies"] += len(pairs)
+            if short:
+                for i in staged:
+                    self.kv.drop_draft(i)
+                return False
+        self._kv_len = jnp.asarray(self.kv_len)
+        self._remaining = jnp.asarray(self.remaining)
+        fn = self._get_spec(p_total)
+        args = (self.params, self._last_logits, jnp.asarray(drafts),
+                self.caches, self._kv_len, self._remaining)
+        if self.kv is not None:
+            args = args + (self.kv.tables(),)
+        toks, advance, self._kv_len, self._remaining, self._last_logits, \
+            self.caches = fn(*args)
+        self.stats["decode_dispatches"] += 1
+        self.stats["spec_dispatches"] += 1
+        self.stats["decode_steps"] += 1    # one model evaluation
+
+        toks = np.asarray(toks)                   # [P, slots]; one sync
+        advance = np.asarray(advance)
+        self.kv_len = np.array(self._kv_len)      # writable host mirrors
+        self.remaining = np.array(self._remaining)
+        self._sync_live_peak()
+        for i in act:
+            req = self.active[i]
+            adv = int(advance[i])
+            self.stats["spec_proposed"] += int(proposed[i])
+            self.stats["spec_accepted"] += max(0, adv - 1)
+            if self.kv is not None:
+                self.kv.commit_draft(i, int(self.kv_len[i]))
+            if adv > 0:
+                got = [int(t) for t in toks[:adv, i]]
+                req.generated.extend(got)
+                self.stats["tokens_decoded"] += adv
+                self.proposer.extend(req.rid, got)
+            if self.remaining[i] <= 0:
+                req.done = True
+                self.active[i] = None
+                self.kv_len[i] = 0
+                self.proposer.finish(req.rid)
+                if self.kv is not None:
+                    self.kv.release(i, tokens=self._resume_tokens(req))
+        return True
 
     def step(self) -> None:
         """Admit waiting requests, then run one fused decode dispatch."""

@@ -175,6 +175,11 @@ class _CacheClass:
     owned: List[List[int]]           # per-slot pages, logical order
     bytes_per_page: int              # across every layer of the class
     peak_live_pages: int = 0         # distinct pages referenced by slots
+    # per-slot speculative scratch tail pages: mapped into the table rows
+    # after ``owned`` while a draft is in flight, promoted into ``owned``
+    # by commit_draft or unref'd by drop_draft/release — never registered
+    # in the prefix index, never counted as resident
+    scratch: List[List[int]] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -268,6 +273,7 @@ class PagedKVCache:
                 table=np.full((slots, width), n, np.int32),
                 owned=[[] for _ in range(slots)],
                 bytes_per_page=per_layer_page_elems[key] * itemsize,
+                scratch=[[] for _ in range(slots)],
             )
 
         # prefix reuse needs every class to address positions from zero and
@@ -340,6 +346,10 @@ class PagedKVCache:
         """Extend ``slot``'s tables to cover ``kv_target`` tokens in every
         class.  All-or-nothing: returns False (state unchanged) when any
         pool is short even after evicting reusable-prefix pages."""
+        if any(c.scratch[slot] for c in self.classes.values()):
+            raise RuntimeError(
+                f"grow of slot {slot} with a staged draft: commit or drop "
+                f"the draft first (its table rows overlap the growth)")
         if not self.can_grow(slot, kv_target):
             return False
         for key, c in self.classes.items():
@@ -362,7 +372,10 @@ class PagedKVCache:
         slot's full token stream, completion path) the slot's full pages
         are first demoted into the reusable-prefix index — the index takes
         its own reference, so those pages survive the release until reused
-        or evicted."""
+        or evicted.  Any staged draft is drained first (the preemption
+        contract: in-flight scratch pages are fully unref'd before the
+        request requeues, and they never reach the prefix index)."""
+        self.drop_draft(slot)
         if tokens is not None and self.prefix_enabled:
             c = self.classes["full"]
             if c.owned[slot]:
@@ -385,16 +398,104 @@ class PagedKVCache:
 
     def tables(self) -> Dict[str, jnp.ndarray]:
         """Device block tables for one dispatch (tiny int32 uploads).
-        Asserts the sentinel invariant: a live (owned) table row never
-        holds the sentinel — only unbacked rows do."""
+        Asserts the sentinel invariant: a live table row (owned page or
+        staged draft scratch) never holds the sentinel — only unbacked
+        rows do."""
         for k, c in self.classes.items():
             for slot, owned in enumerate(c.owned):
-                if owned and int(c.table[slot, :len(owned)].max()) \
+                live = len(owned) + len(c.scratch[slot])
+                if live and int(c.table[slot, :live].max()) \
                         >= c.pool.num_pages:
                     raise AssertionError(
                         f"class '{k}' slot {slot}: live block-table row "
                         f"holds the sentinel page")
         return {k: jnp.asarray(c.table) for k, c in self.classes.items()}
+
+    # -- speculative drafts (scratch tail pages) ----------------------------
+
+    def reserve_draft(self, slot: int, kv_len: int,
+                      kv_target: int) -> Optional[List[Tuple[str, int, int]]]:
+        """Stage scratch pages so chain positions ``[kv_len, kv_target)``
+        are writable: the draft's K/V lands in tail pages mapped into the
+        slot's table rows *after* its owned pages, so a rejected draft
+        rolls back by dropping references — no K/V copies.
+
+        Owned boundary pages the draft would write (the partially-filled
+        last page, when shared with the prefix index or another slot) are
+        copy-on-write'd exactly like :meth:`admit`'s page-aligned case:
+        the returned pairs must go through :meth:`apply_cow` before the
+        verify dispatch.  All-or-nothing: returns None (state unchanged)
+        when any pool is short even after LRU prefix eviction.  Scratch
+        pages never enter the prefix index until :meth:`commit_draft`
+        promotes them into ``owned``."""
+        if any(c.scratch[slot] for c in self.classes.values()):
+            raise RuntimeError(f"slot {slot} already has a staged draft")
+        ps = self.page_size
+        plan: Dict[str, Tuple[int, List[int]]] = {}
+        for key, c in self.classes.items():
+            need = self.pages_needed(key, kv_target)
+            have = len(c.owned[slot])
+            n_scratch = max(0, need - have)
+            first = min(kv_len, c.capacity) // ps
+            cow_idx = [i for i in range(first, have)
+                       if c.pool.refcount(c.owned[slot][i]) > 1]
+            plan[key] = (n_scratch, cow_idx)
+            fresh = n_scratch + len(cow_idx)
+            if fresh > c.pool.free_pages + self._evictable_pages(key, c):
+                return None
+        pairs: List[Tuple[str, int, int]] = []
+        for key, c in self.classes.items():
+            n_scratch, cow_idx = plan[key]
+            fresh = n_scratch + len(cow_idx)
+            if fresh > c.pool.free_pages:
+                self._evict_prefix(c, fresh)
+            for i in cow_idx:
+                src = c.owned[slot][i]
+                dst = c.pool.alloc(1)[0]
+                # the slot's reference on src transfers to the pair
+                # (apply_cow unrefs it); the slot owns the copy target
+                pairs.append((key, src, dst))
+                c.owned[slot][i] = dst
+                c.table[slot, i] = dst
+            got = c.pool.alloc(n_scratch)
+            have = len(c.owned[slot])
+            c.table[slot, have:have + n_scratch] = got
+            c.scratch[slot] = got
+        return pairs
+
+    def commit_draft(self, slot: int, kv_len_new: int) -> None:
+        """Accept a draft prefix by block-table surgery: the scratch pages
+        covering ``kv_len_new`` tokens are promoted into ``owned`` (their
+        single reference transfers — no copy), the rejected tail's pages
+        drop their references, and rows beyond the new extent reset to
+        the sentinel."""
+        for c in self.classes.values():
+            need = _ceil_div(min(kv_len_new, c.capacity), self.page_size)
+            keep = max(0, need - len(c.owned[slot]))
+            if keep > len(c.scratch[slot]):
+                raise RuntimeError(
+                    f"commit of {kv_len_new} tokens needs {keep} scratch "
+                    f"pages but slot {slot} staged "
+                    f"{len(c.scratch[slot])}")
+            kept, dropped = c.scratch[slot][:keep], c.scratch[slot][keep:]
+            c.owned[slot].extend(kept)
+            for p in dropped:
+                c.pool.unref(p)
+            c.scratch[slot] = []
+            c.table[slot, len(c.owned[slot]):] = self._sentinel(c)
+        self._touch_peaks()
+
+    def drop_draft(self, slot: int) -> None:
+        """Roll back a staged draft entirely: unref every scratch page and
+        reset its table rows (rejection with zero kept pages, and the
+        preemption path via :meth:`release`).  Idempotent."""
+        for c in self.classes.values():
+            if not c.scratch[slot]:
+                continue
+            for p in c.scratch[slot]:
+                c.pool.unref(p)
+            c.scratch[slot] = []
+            c.table[slot, len(c.owned[slot]):] = self._sentinel(c)
 
     # -- prefix cache -------------------------------------------------------
 
@@ -512,7 +613,7 @@ class PagedKVCache:
             return {"cached_len": 0, "reused": 0, "cow_pairs": []}
 
         c = self.classes["full"]
-        if c.owned[slot]:
+        if c.owned[slot] or c.scratch[slot]:
             raise RuntimeError(f"admit into non-empty slot {slot}")
         n_tok = len(tokens)
         hashes = self._chain_hashes(tokens)
@@ -613,6 +714,10 @@ class PagedKVCache:
         prefix pages count once); reusable-prefix pages held only by the
         index are reported separately — they are reclaimable on demand.
         Physical = the whole pool allocation (device arrays are static).
+        In-flight speculative scratch pages are *not* resident — they are
+        transient (promoted or dropped within the step) and counting them
+        would double-book the accept path (the same bytes reappear as
+        owned pages on commit); they report separately as ``draft_pages``.
         SSM slot state is counted separately — it is O(slots), independent
         of sequence length.  With a device-sharded pool the head/rank axis
         of every page splits evenly over ``tp`` devices (validated at
@@ -652,6 +757,8 @@ class PagedKVCache:
                                 for k, c in self.classes.items()},
             "resident_cache_bytes": resident,
             "peak_resident_cache_bytes": peak,
+            "draft_pages": {k: sum(len(s) for s in c.scratch)
+                            for k, c in self.classes.items()},
             "physical_cache_bytes": self._physical_page_bytes,
             "ssm_state_bytes": self._state_bytes,
             "sharding": sharding,

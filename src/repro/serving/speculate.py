@@ -1,0 +1,226 @@
+"""Speculative decoding on the paged pool: proposer + draft bookkeeping.
+
+Decode advances one token per model evaluation; the FuseMax-style fused
+decode cascade is badly under-fed at query length 1.  Speculation widens
+the query axis: a *model-free* proposer guesses the next ``k`` tokens, a
+single verify dispatch scores all ``k+1`` positions (the model's own next
+token plus the draft chain) through the same paged kernels, and the
+engine commits the accepted prefix — the greedy stream is bit-identical
+to non-speculative decode because every committed token is still the
+model's own argmax (see :func:`transformer.speculative_step`).
+
+Two pieces live here:
+
+* :class:`NGramProposer` — prompt-lookup drafting (no second model to
+  serve).  A draft chain is the continuation of the longest n-gram
+  suffix match of the slot's own prompt+generated history; a persistent
+  cross-request table additionally indexes every *completed* stream, so
+  duplicate/popular-query traffic (the request-scope analogue of the
+  prefix cache's shared-prefix traffic) drafts from the original
+  request's stream and verifies near-perfectly.  Deterministic by
+  construction: pure dict/list lookups, most-recent occurrence wins.
+  Benchmarks must :meth:`clear` it between repeats — a warm table would
+  otherwise memorize the identical re-served trace and report fake
+  acceptance (the same trap the prefix index had before the
+  per-repeat clear in PR 4).
+
+* :class:`DraftTree` / :class:`DraftBranch` — page bookkeeping for a
+  slot's in-flight draft.  Speculative K/V lands in *scratch* tail pages
+  (:meth:`PagedKVCache.reserve_draft`); accepted tokens are committed by
+  promoting the covering scratch pages into the slot's owned set and
+  rejected tails roll back by dropping references — block-table surgery,
+  no K/V copies, no recompute.  Extra candidate branches share the
+  committed trunk pages via ``PagePool.ref`` and own only their scratch
+  tails, so an n-way tree costs n tail allocations, not n cache copies.
+  Scratch pages never enter the prefix index (only ``owned`` pages are
+  demoted on release) and are drained on preemption, so a preempted
+  slot's in-flight draft pages are fully unref'd before requeue.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class NGramProposer:
+    """Deterministic prompt-lookup drafter.
+
+    ``propose`` returns up to ``k`` draft tokens continuing the request's
+    history: the longest n-gram suffix match (n = ``max_n`` down to 1),
+    most recent occurrence first, searched in the request's own
+    prompt+generated history and then in the table of completed streams.
+    """
+
+    def __init__(self, k: int, max_n: int = 4, max_streams: int = 256):
+        if k < 1:
+            raise ValueError(f"need k >= 1 draft tokens, got {k}")
+        self.k = k
+        self.max_n = max_n
+        self.max_streams = max_streams
+        self._hist: Dict[int, List[int]] = {}
+        self._streams: Dict[int, List[int]] = {}
+        self._index: Dict[int, Dict[Tuple[int, ...], Tuple[int, int]]] = {
+            n: {} for n in range(1, max_n + 1)}
+        self._next_sid = 0
+
+    # -- request lifecycle --------------------------------------------------
+
+    def begin(self, rid: int, tokens) -> None:
+        """(Re-)open a request's history — called at (re-)admission with
+        the full resume stream, so preemption replay starts clean."""
+        self._hist[rid] = [int(t) for t in tokens]
+
+    def extend(self, rid: int, tokens) -> None:
+        """Append committed tokens to an open request's history."""
+        h = self._hist.get(rid)
+        if h is not None:
+            h.extend(int(t) for t in tokens)
+
+    def finish(self, rid: int) -> None:
+        """Close a request: index its full stream in the cross-request
+        table (later identical/overlapping requests draft from it) and
+        drop the per-request history."""
+        h = self._hist.pop(rid, None)
+        if h is None or len(h) < 2:
+            return
+        if len(self._streams) >= self.max_streams:
+            oldest = min(self._streams)
+            del self._streams[oldest]
+            for idx in self._index.values():
+                for pat in [p for p, (s, _) in idx.items() if s == oldest]:
+                    del idx[pat]
+        sid = self._next_sid
+        self._next_sid += 1
+        self._streams[sid] = h
+        # ascending positions: the most recent occurrence of a pattern
+        # wins (last-write), matching the own-history search direction
+        for n in range(1, self.max_n + 1):
+            idx = self._index[n]
+            for i in range(len(h) - n):
+                idx[tuple(h[i:i + n])] = (sid, i)
+
+    def clear(self) -> None:
+        """Drop all state (bench repeats; unrelated traffic phases)."""
+        self._hist.clear()
+        self._streams.clear()
+        for idx in self._index.values():
+            idx.clear()
+        self._next_sid = 0
+
+    # -- drafting -----------------------------------------------------------
+
+    @staticmethod
+    def _find_last(h: List[int], pat: List[int]) -> int:
+        """Most recent occurrence of ``pat`` in ``h`` that has at least
+        one continuation token and is not the suffix itself; -1 if none."""
+        n = len(pat)
+        for j in range(len(h) - n - 1, -1, -1):
+            if h[j:j + n] == pat:
+                return j
+        return -1
+
+    def propose(self, rid: int, k: Optional[int] = None) -> np.ndarray:
+        """Up to ``k`` draft tokens continuing ``rid``'s history (possibly
+        fewer, possibly empty).  Draft position 0 is the proposer's guess
+        of the model's *next* token — the verify step feeds the model's
+        own argmax there, so callers send ``propose(...)[1:]`` as the
+        speculative chain (see ``transformer.speculative_step``)."""
+        k = self.k if k is None else k
+        h = self._hist.get(rid)
+        if not h:
+            return np.zeros((0,), np.int32)
+        for n in range(min(self.max_n, len(h) - 1), 0, -1):
+            pat = h[-n:]
+            j = self._find_last(h, pat)
+            if j >= 0:
+                cont = h[j + n:j + n + k]
+                if cont:
+                    return np.asarray(cont, np.int32)
+            ent = self._index[n].get(tuple(pat))
+            if ent is not None:
+                sid, i = ent
+                cont = self._streams[sid][i + n:i + n + k]
+                if cont:
+                    return np.asarray(cont, np.int32)
+        return np.zeros((0,), np.int32)
+
+
+class DraftBranch:
+    """One candidate branch of a draft tree: shares the trunk's committed
+    pages by reference and owns only its scratch tail pages.  Purely a
+    page-accounting object — the hot serving path verifies a single
+    chain, but the refcount/COW machinery makes n-way trees free of K/V
+    copies, which this class (and its tests) pins down."""
+
+    def __init__(self, pool, trunk_pages: List[int], scratch_pages: int):
+        self.pool = pool
+        self.trunk = list(trunk_pages)
+        for p in self.trunk:
+            pool.ref(p)
+        got = pool.alloc(scratch_pages)
+        if got is None:
+            for p in self.trunk:
+                pool.unref(p)
+            raise RuntimeError(
+                f"pool cannot back a {scratch_pages}-page draft branch")
+        self.scratch = got
+        self.closed = False
+
+    @property
+    def row(self) -> List[int]:
+        """The branch's logical page row: shared trunk + private tail."""
+        return self.trunk + self.scratch
+
+    def close(self, keep_scratch: int = 0) -> List[int]:
+        """Drop the branch: unref the shared trunk pages and all scratch
+        beyond ``keep_scratch``.  Returns the kept scratch pages (their
+        single reference transfers to the caller — the accepted-branch
+        commit path)."""
+        if self.closed:
+            return []
+        kept, dropped = self.scratch[:keep_scratch], \
+            self.scratch[keep_scratch:]
+        for p in dropped:
+            self.pool.unref(p)
+        for p in self.trunk:
+            self.pool.unref(p)
+        self.closed = True
+        self.scratch = []
+        return kept
+
+
+class DraftTree:
+    """Per-slot speculative reservation state over a :class:`PagedKVCache`.
+
+    The engine's verify loop is: ``stage`` scratch pages to cover the
+    draft span (all-or-nothing, COW-safe at a shared mid-page boundary),
+    dispatch verify, then ``commit`` the accepted length (promoting the
+    covering scratch pages, rolling the rest back) or ``abort`` on
+    preemption.  Exactly one staged draft per slot at a time.
+    """
+
+    def __init__(self, kv, slot: int):
+        self.kv = kv
+        self.slot = slot
+        self.staged = False
+
+    def stage(self, kv_len: int, kv_target: int) -> Optional[list]:
+        """Reserve scratch pages so positions [kv_len, kv_target) are
+        writable.  Returns the deferred COW pairs to apply before the
+        verify dispatch, or None (state unchanged) if the pool is short
+        even after prefix eviction."""
+        pairs = self.kv.reserve_draft(self.slot, kv_len, kv_target)
+        self.staged = pairs is not None
+        return pairs
+
+    def commit(self, kv_len_new: int) -> None:
+        """Accept the prefix: scratch pages covering ``kv_len_new``
+        tokens become owned; the rejected tail's pages drop their refs."""
+        self.kv.commit_draft(self.slot, kv_len_new)
+        self.staged = False
+
+    def abort(self) -> None:
+        """Roll back the whole draft (rejection / preemption requeue)."""
+        self.kv.drop_draft(self.slot)
+        self.staged = False

@@ -1,0 +1,336 @@
+"""Speculative decoding: bit-identical greedy streams, draft-page surgery.
+
+Covers the three layers of the speculation stack:
+
+* kernel/model — ``verify_step`` scores a P-token chain exactly like P
+  sequential ``decode_step`` calls (bitwise, at ragged kv_len);
+* cache — draft scratch pages stage/commit/rollback as pure block-table
+  surgery (COW at a shared mid-page boundary, free-list restoration
+  across completion AND preemption, no prefix-index pollution);
+* engine — greedy streams with ``speculate=k`` are bit-identical to the
+  non-speculative engine across dense/paged/paged+prefix layouts for
+  both GQA and MLA towers, including under tiny-pool preemption.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.model import transformer as tf
+from repro.model.layers import Runtime
+from repro.serving.engine import (
+    Request, ServeEngine, speculation_supported,
+)
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.speculate import DraftBranch, NGramProposer
+
+RT = Runtime(activation_dtype=jnp.float32, param_dtype=jnp.float32)
+
+MLA_CFG = ModelConfig(
+    name="mla-spec-test", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=64,
+    mla=MLAConfig(q_lora_rank=64, kv_lora_rank=32, rope_dim=16,
+                  nope_dim=32, v_dim=32))
+
+
+# ---------------------------------------------------------------------------
+# model tier: verify_step vs the k-step decode oracle
+# ---------------------------------------------------------------------------
+
+def test_verify_step_matches_stepwise_decode_ragged():
+    """verify_step logits at chain position j match what decode_step
+    returns after committing the chain prefix — per row, at ragged
+    kv_len/span (the accept rule's induction hypothesis).  The paged
+    attention read is bit-exact vs the single-token kernel (same split
+    geometry — see kernels.ops); end-to-end logits additionally go
+    through [B,P,d]-shaped projection/MLP matmuls whose XLA reduction
+    order differs from the [B,1,d] path, so the comparison is fp32
+    reduction-order tolerance plus exact argmax (what the accept rule
+    and the committed stream actually consume)."""
+    cfg = get_config("stablelm-1.6b-smoke")
+    params, _ = tf.init(cfg, jax.random.PRNGKey(0), RT)
+    rng = np.random.default_rng(3)
+    lens = [5, 9]                      # ragged committed lengths
+    p_total = 4
+    span = np.array([p_total, p_total - 1], np.int32)
+    prompts = np.zeros((2, max(lens)), np.int32)
+    for i, l in enumerate(lens):
+        prompts[i, :l] = rng.integers(0, cfg.vocab, size=l)
+    chain = rng.integers(0, cfg.vocab, size=(2, p_total)).astype(np.int32)
+
+    caches = tf.init_cache(cfg, 2, 64, jnp.float32)
+    _, caches = tf.prefill(cfg, params, {"inputs": jnp.asarray(prompts)},
+                           caches, RT,
+                           true_len=jnp.asarray(lens, jnp.int32))
+    kv0 = jnp.asarray(lens, jnp.int32) + 1     # incl. chain position 0
+
+    ref = []
+    ref_caches = caches
+    for j in range(p_total):
+        lg, ref_caches = tf.decode_step(
+            cfg, params, jnp.asarray(chain[:, j:j + 1]), ref_caches,
+            kv0 + j, RT)
+        ref.append(np.asarray(lg))
+
+    logits, _ = tf.verify_step(cfg, params, jnp.asarray(chain), caches,
+                               kv0, jnp.asarray(span), RT)
+    logits = np.asarray(logits)
+    for i in range(2):
+        for j in range(int(span[i])):
+            np.testing.assert_allclose(logits[i, j], ref[j][i],
+                                       rtol=1e-4, atol=1e-4)
+            assert int(np.argmax(logits[i, j])) == \
+                int(np.argmax(ref[j][i])), (i, j)
+
+
+# ---------------------------------------------------------------------------
+# cache tier: block-table surgery
+# ---------------------------------------------------------------------------
+
+def _paged_kv(num_pages=10, page_size=8, slots=2, max_len=64):
+    # prefix_caching off: the index takes its own page references at
+    # admit/release, which would obscure the pure draft-page accounting
+    # these tests pin down (the engine tests cover the interplay)
+    cfg = get_config("stablelm-1.6b-smoke")
+    return PagedKVCache(cfg, slots, max_len, jnp.float32,
+                        page_size=page_size, num_pages=num_pages,
+                        prefix_caching=False)
+
+
+def test_draft_lifecycle_restores_free_list():
+    """stage → commit-partial → stage → release leaves the free list
+    exactly as found (the zero-net-leak invariant, completion path)."""
+    kv = _paged_kv()
+    c = kv.classes["full"]
+    free0 = c.pool.free_pages
+    assert kv.admit(0, np.arange(12, dtype=np.int32), 13) is not None
+    assert kv.reserve_draft(0, 12, 12 + 5) == []      # no COW needed
+    assert len(c.scratch[0]) == 1                     # 16 → 17 spills
+    assert kv.memory_stats()["draft_pages"]["full"] == 1
+    kv.commit_draft(0, 14)                            # accept 2: same page
+    assert c.scratch[0] == [] and len(c.owned[0]) == 2
+    assert kv.reserve_draft(0, 14, 14 + 5) == []
+    kv.commit_draft(0, 17)                            # accept into scratch
+    assert len(c.owned[0]) == 3
+    kv.release(0)
+    kv.clear_prefix()
+    assert c.pool.free_pages == free0
+    assert kv.memory_stats()["draft_pages"]["full"] == 0
+
+
+def test_release_drains_staged_draft():
+    """Preemption contract: release() with a draft still staged unrefs
+    every scratch page before the slot requeues."""
+    kv = _paged_kv()
+    c = kv.classes["full"]
+    free0 = c.pool.free_pages
+    assert kv.admit(0, np.arange(12, dtype=np.int32), 13) is not None
+    assert kv.reserve_draft(0, 12, 12 + 6) == []
+    assert c.scratch[0]
+    kv.release(0)                       # preemption: no tokens= demotion
+    assert c.pool.free_pages == free0
+    assert all(not s for s in c.scratch)
+
+
+def test_reserve_draft_cow_at_shared_mid_page_boundary():
+    """A draft whose first write lands mid-way into a page another table
+    still references must COW that page: the slot's ref moves to the
+    copy, the writer never touches the shared original, and commit at an
+    accept boundary inside the COW'd page keeps refcounts exact."""
+    kv = _paged_kv()
+    c = kv.classes["full"]
+    free0 = c.pool.free_pages
+    assert kv.admit(0, np.arange(12, dtype=np.int32), 13) is not None
+    boundary = c.owned[0][1]            # page holding tokens 8..11
+    c.pool.ref(boundary)                # simulate another reader
+    pairs = kv.reserve_draft(0, 12, 12 + 5)
+    assert pairs is not None and len(pairs) == 1
+    key, src, dst = pairs[0]
+    assert (key, src) == ("full", boundary)
+    assert c.owned[0][1] == dst and c.table[0, 1] == dst
+    kv.caches = kv.apply_cow(kv.caches, pairs)
+    assert c.pool.refcount(boundary) == 1     # only the manual ref left
+    assert c.pool.refcount(dst) == 1
+    kv.commit_draft(0, 15)              # accept boundary inside dst's page
+    kv.release(0)
+    kv.clear_prefix()
+    c.pool.unref(boundary)
+    assert c.pool.free_pages == free0
+
+
+def test_draft_branch_shares_trunk_by_ref():
+    kv = _paged_kv()
+    c = kv.classes["full"]
+    assert kv.admit(0, np.arange(16, dtype=np.int32), 17) is not None
+    trunk = list(c.owned[0])
+    free_before = c.pool.free_pages
+    br = DraftBranch(c.pool, trunk, scratch_pages=2)
+    assert [c.pool.refcount(p) for p in trunk] == [2] * len(trunk)
+    assert c.pool.free_pages == free_before - 2   # tails, not cache copies
+    assert br.row[:len(trunk)] == trunk
+    kept = br.close(keep_scratch=1)
+    assert len(kept) == 1 and c.pool.refcount(kept[0]) == 1
+    assert [c.pool.refcount(p) for p in trunk] == [1] * len(trunk)
+    c.pool.unref(kept[0])
+    assert c.pool.free_pages == free_before
+
+
+def test_scratch_guards():
+    kv = _paged_kv()
+    assert kv.admit(0, np.arange(12, dtype=np.int32), 13) is not None
+    assert kv.reserve_draft(0, 12, 12 + 6) == []
+    with pytest.raises(RuntimeError):
+        kv.reserve_draft(0, 12, 12 + 6)     # one staged draft per slot
+    with pytest.raises(RuntimeError):
+        kv.grow(0, 30)                      # growth with a staged draft
+    kv.drop_draft(0)
+    kv.drop_draft(0)                        # idempotent
+
+
+# ---------------------------------------------------------------------------
+# proposer
+# ---------------------------------------------------------------------------
+
+def test_ngram_proposer_deterministic_property():
+    """Two proposers fed the identical op sequence propose identically —
+    a seeded-loop property check (hypothesis is not a dependency)."""
+    for trial in range(20):
+        rng = np.random.default_rng(trial)
+        a, b = NGramProposer(k=5), NGramProposer(k=5)
+        live = []
+        for step in range(60):
+            op = rng.integers(0, 4)
+            if op == 0 or not live:
+                rid = int(rng.integers(0, 100))
+                toks = rng.integers(0, 8, size=rng.integers(2, 10))
+                a.begin(rid, toks), b.begin(rid, toks)
+                if rid not in live:
+                    live.append(rid)
+            elif op == 1:
+                rid = live[int(rng.integers(0, len(live)))]
+                toks = rng.integers(0, 8, size=rng.integers(1, 5))
+                a.extend(rid, toks), b.extend(rid, toks)
+            elif op == 2:
+                rid = live.pop(int(rng.integers(0, len(live))))
+                a.finish(rid), b.finish(rid)
+            else:
+                rid = live[int(rng.integers(0, len(live)))]
+                pa, pb = a.propose(rid), b.propose(rid)
+                assert np.array_equal(pa, pb)
+                assert len(pa) <= 5
+
+
+def test_ngram_proposer_drafts_duplicate_stream():
+    """Cross-request drafting: a duplicate of a completed request drafts
+    the original's exact continuation (the --duplicates workload)."""
+    p = NGramProposer(k=4)
+    prompt, gen = [3, 1, 4, 1, 5], [9, 2, 6, 5, 3, 5]
+    p.begin(0, prompt)
+    p.extend(0, gen)
+    p.finish(0)
+    p.begin(1, prompt)                  # identical later request
+    d = p.propose(1)
+    assert list(d) == gen[:4]
+    p.extend(1, gen[:3])                # mid-stream: still locked on
+    assert list(p.propose(1)) == gen[3:6]
+
+
+# ---------------------------------------------------------------------------
+# engine tier: bit-identical greedy streams
+# ---------------------------------------------------------------------------
+
+def _serve(cfg, params, prompts, *, layout, speculate, prefix=True,
+           num_pages=None, slots=2, max_len=64, new_tokens=12,
+           page_size=8):
+    eng = ServeEngine(cfg, params, slots=slots, max_len=max_len, rt=RT,
+                      decode_chunk=8, cache_layout=layout,
+                      page_size=page_size, num_pages=num_pages,
+                      prefix_caching=prefix, speculate=speculate)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=new_tokens)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done for r in reqs)
+    return eng, [r.generated for r in reqs]
+
+
+def _dup_trace(cfg, rng, lens):
+    prompts = [rng.integers(0, cfg.vocab, size=s).astype(np.int32)
+               for s in lens]
+    return prompts + [p.copy() for p in prompts[:2]]
+
+
+@pytest.mark.parametrize("cfg_name", ["gqa", "mla"])
+def test_engine_spec_streams_bit_identical(cfg_name):
+    """speculate=k greedy streams equal the non-speculative engine's
+    across dense / paged / paged+prefix / paged-noprefix layouts — and
+    the speculative path actually ran (accepted drafts > 0)."""
+    cfg = get_config("stablelm-1.6b-smoke") if cfg_name == "gqa" \
+        else MLA_CFG
+    params, _ = tf.init(cfg, jax.random.PRNGKey(0), RT)
+    prompts = _dup_trace(cfg, np.random.default_rng(0), (7, 12, 5, 9))
+
+    _, base = _serve(cfg, params, prompts, layout="dense", speculate=None)
+    for layout, prefix in (("dense", True), ("paged", True),
+                           ("paged", False)):
+        eng, outs = _serve(cfg, params, prompts, layout=layout,
+                           speculate=4, prefix=prefix)
+        assert outs == base, (layout, prefix)
+        assert eng.stats["spec_dispatches"] > 0
+        assert eng.stats["spec_accepted"] > 0     # duplicates drafted
+        if eng.kv is not None:
+            eng.clear_prefix_cache()
+            m = eng.kv.memory_stats()
+            assert m["pages_in_use"] == {"full": 0}
+            assert m["draft_pages"] == {"full": 0}
+
+
+def test_engine_spec_tiny_pool_preemption_no_leak():
+    """Regression (satellite a): preemption under speculation on a pool
+    too small for both slots' drafts — streams still match the dense
+    engine bit-for-bit, and after the trace drains the free list is
+    exactly restored (no scratch ref survives a requeue)."""
+    cfg = get_config("stablelm-1.6b-smoke")
+    params, _ = tf.init(cfg, jax.random.PRNGKey(0), RT)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, size=s).astype(np.int32)
+               for s in (12, 14, 11)]
+
+    _, base = _serve(cfg, params, prompts, layout="dense", speculate=None,
+                     new_tokens=16)
+    eng, outs = _serve(cfg, params, prompts, layout="paged", speculate=4,
+                       prefix=True, num_pages=8, page_size=4,
+                       new_tokens=16)
+    assert outs == base
+    assert eng.stats["preemptions"] > 0
+    assert eng.stats["spec_dispatches"] > 0
+    eng.clear_prefix_cache()
+    c = eng.kv.classes["full"]
+    assert c.pool.free_pages == c.pool.num_pages
+    assert all(not s for s in c.scratch)
+    assert all(not o for o in c.owned)
+
+
+# ---------------------------------------------------------------------------
+# gating
+# ---------------------------------------------------------------------------
+
+def test_speculation_gating():
+    cfg = get_config("stablelm-1.6b-smoke")
+    assert speculation_supported(cfg)
+    windowed = ModelConfig(name="w", n_layers=2, d_model=32, n_heads=2,
+                           n_kv_heads=2, d_ff=64, vocab=32, window=8)
+    assert not speculation_supported(windowed)
+    params, _ = tf.init(cfg, jax.random.PRNGKey(0), RT)
+    with pytest.raises(ValueError, match="greedy-only"):
+        ServeEngine(cfg, params, slots=2, max_len=64, rt=RT,
+                    temperature=0.7, speculate=2)
+    with pytest.raises(ValueError, match="speculate >= 1"):
+        ServeEngine(cfg, params, slots=2, max_len=64, rt=RT, speculate=0)
+    wparams, _ = tf.init(windowed, jax.random.PRNGKey(0), RT)
+    with pytest.raises(ValueError, match="global GQA/MLA"):
+        ServeEngine(windowed, wparams, slots=2, max_len=64, rt=RT,
+                    speculate=2)
