@@ -17,7 +17,13 @@ each have a ``min_*`` floor — acceptance quietly collapsing (a proposer
 or accept-rule regression) would otherwise read as runner jitter.  The
 acceptance floors are deterministic counters, so they sit close to the
 measured values; the speedup-ratio floor is wall-clock and sits wide.
-The gate is applied to the top-level
+A ``min_promote_hit_rate`` floor gates the host swap tier (demoted
+prefix chains must actually promote back on hits — a broken promote
+path would silently degrade to recompute), and a
+``max_bytes_per_live_token`` ceiling per layout pins the quantized
+pool's honest byte accounting (data + scale pools): scale-pool bloat or
+a silent fallback to full-width storage fails the gate.  The gate is
+applied to the top-level
 (primary-layout) tok/s AND per layout for every entry in the baseline's
 ``layouts`` block — the smoke's primary layout is dense, so without the
 per-layout floors a regression confined to the paged/prefix paths (the
@@ -40,6 +46,16 @@ def tokens_reused(metrics: dict) -> int:
     layouts = metrics.get("layouts", {})
     return max((m.get("prefix", {}).get("tokens_reused", 0)
                 for m in layouts.values()), default=0)
+
+
+def promote_hit_rate(metrics: dict) -> float:
+    """Best host-tier promote hit rate across swap-enabled layouts."""
+    best = 0.0
+    for m in metrics.get("layouts", {}).values():
+        ht = m.get("memory", {}).get("host_tier") or {}
+        if ht.get("enabled"):
+            best = max(best, float(ht.get("promote_hit_rate", 0.0)))
+    return best
 
 
 def check(metrics: dict, baseline_all: dict, key: str,
@@ -94,6 +110,30 @@ def check(metrics: dict, baseline_all: dict, key: str,
         failures.append(
             f"prefix-cache regression: tokens_reused {reused} < "
             f"baseline {base_reused}")
+    floor = base.get("min_promote_hit_rate")
+    if floor is not None:
+        got = promote_hit_rate(metrics)
+        print(f"[{key}] host-tier promote_hit_rate {got} "
+              f"(gate: >= {floor})")
+        if got < float(floor):
+            failures.append(
+                f"swap-tier regression: promote_hit_rate {got} < "
+                f"{floor} floor (demoted chains are not being promoted "
+                f"back on prefix hits)")
+    for lo, ceil in (base.get("max_bytes_per_live_token") or {}).items():
+        m_lo = metrics.get("layouts", {}).get(lo)
+        if m_lo is None:
+            failures.append(f"layout {lo!r} missing from the bench run "
+                            f"but byte-gated by the baseline")
+            continue
+        got = float(m_lo["memory"]["bytes_per_live_token"])
+        print(f"[{key}] {lo} bytes_per_live_token {got} "
+              f"(gate: <= {ceil})")
+        if got > float(ceil):
+            failures.append(
+                f"quantized-cache regression: {lo} bytes_per_live_token "
+                f"{got} > {ceil} ceiling (scale-pool bloat or a dtype "
+                f"fallback to full width)")
     spec_base = base.get("speculation")
     if spec_base:
         sp = metrics.get("speculation")
@@ -122,8 +162,8 @@ def main(argv=None) -> int:
     ap.add_argument("--bench", default="BENCH_serving.json")
     ap.add_argument("--baseline", default="BENCH_baseline.json")
     ap.add_argument("--key", default="serving_smoke",
-                    help="baseline entry to gate against "
-                         "(serving_smoke | prefix_smoke | spec_smoke)")
+                    help="baseline entry to gate against (serving_smoke "
+                         "| prefix_smoke | spec_smoke | swap_smoke)")
     ap.add_argument("--leg", default="",
                     help="CI matrix leg (oldest | newest); a baseline "
                          "entry '<key>@<leg>' overrides the shared one")

@@ -144,8 +144,13 @@ def validate_kv_shard(cfg, tp: int) -> None:
 #: paged-cache leaf name → the dimension (from the right) that shards:
 #: GQA page arrays are [..., P, page_size, Hkv, dh] (head axis at -2);
 #: MLA latent pages are [..., P, page_size, r] (rank axis at -1).
+#: Quantized-pool GQA scale pools [..., P, page_size, Hkv] shard on the
+#: head axis (-1); MLA scale pools [..., P, page_size] carry one scalar
+#: per full latent vector — no shardable axis — so they stay replicated
+#: by falling through to the default branch below.
 _PAGED_SHARD_DIMS = {"k_pages": -2, "v_pages": -2,
-                     "ckv_pages": -1, "krope_pages": -1}
+                     "ckv_pages": -1, "krope_pages": -1,
+                     "k_scale": -1, "v_scale": -1}
 
 
 def paged_cache_shardings(caches, shard: KVShard):

@@ -216,20 +216,28 @@ def _paged_decode_candidates(n_pages: int, page_size: int) -> list[DecodeParams]
 
 def paged_decode_params(n_pages: int, page_size: int, g: int, e: int, f: int,
                         *, backend: str = "cpu",
-                        impl: str = "jnp") -> DecodeParams:
+                        impl: str = "jnp",
+                        elem_bytes: int = 4) -> DecodeParams:
     """Pick (splits, block_k) for a paged split-K decode over ``n_pages``
     pages of ``page_size`` tokens each.  Same cost model as
     :func:`decode_params` (total M = n_pages·page_size) restricted to
-    page-aligned candidates."""
+    page-aligned candidates.
+
+    ``elem_bytes`` is the page-pool element width: quantized pools
+    (fp8/int8, 1 byte) halve-to-quarter the VMEM working set per tile, so
+    the model may pick wider ``block_k`` tiles than for bf16/fp32 pools —
+    keyed separately so both coexist in one process."""
     _load_disk_cache()
     key = ("pdecode", backend, impl, str(n_pages), str(page_size),
-           str(_bucket(g)), str(e), str(f))
+           str(_bucket(g)), str(e), str(f), str(elem_bytes))
     hit = _TABLE.get(key)
     if hit is not None:
         return DecodeParams(int(hit[0]), int(hit[1]))
     m = n_pages * page_size
     cands = _paged_decode_candidates(n_pages, page_size)
-    best = min(cands, key=lambda c: _decode_cost(c, m, g, e, f))
+    best = min(cands,
+               key=lambda c: _decode_cost(c, m, g, e, f,
+                                          elem_bytes=elem_bytes))
     _TABLE[key] = (best.splits, best.block_k)
     return best
 
@@ -237,23 +245,26 @@ def paged_decode_params(n_pages: int, page_size: int, g: int, e: int, f: int,
 def mla_paged_decode_params(n_pages: int, page_size: int, g: int,
                             rank: int, rope_dim: int, *,
                             backend: str = "cpu",
-                            impl: str = "jnp") -> DecodeParams:
+                            impl: str = "jnp",
+                            elem_bytes: int = 4) -> DecodeParams:
     """Pick (splits, block_k) for the paged *latent-space* MLA decode
     kernel: the K stream is the concatenated (rank + rope_dim) latent page
     pair and the V stream is the rank-wide latent itself, so the cost model
     runs with e = rank + rope_dim, f = rank over the same page-aligned
     candidate set as :func:`paged_decode_params` (splits divide the table
-    width, block_k divides page_size)."""
+    width, block_k divides page_size).  ``elem_bytes`` as in
+    :func:`paged_decode_params` (quantized latent pools)."""
     _load_disk_cache()
     key = ("mla-pdecode", backend, impl, str(n_pages), str(page_size),
-           str(_bucket(g)), str(rank), str(rope_dim))
+           str(_bucket(g)), str(rank), str(rope_dim), str(elem_bytes))
     hit = _TABLE.get(key)
     if hit is not None:
         return DecodeParams(int(hit[0]), int(hit[1]))
     m = n_pages * page_size
     cands = _paged_decode_candidates(n_pages, page_size)
     best = min(cands,
-               key=lambda c: _decode_cost(c, m, g, rank + rope_dim, rank))
+               key=lambda c: _decode_cost(c, m, g, rank + rope_dim, rank,
+                                          elem_bytes=elem_bytes))
     _TABLE[key] = (best.splits, best.block_k)
     return best
 

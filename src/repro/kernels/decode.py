@@ -248,9 +248,7 @@ def _paged_decode_partials_kernel(
     kv_len_ref,                     # SMEM scalar-prefetch: [B] int32
     bt_ref,                         # SMEM scalar-prefetch: [B, W] int32
     q_ref, k_ref, v_ref,
-    pm_ref, pl_ref, pnv_ref,        # partial outputs per (bh, s)
-    m_scratch, l_scratch, acc_scratch,
-    *,
+    *refs,                          # [ks_ref, vs_ref,] outputs, scratch
     scale: float,
     softcap: Optional[float],
     hkv: int,
@@ -260,11 +258,24 @@ def _paged_decode_partials_kernel(
     exp_impl: str,
     n_pos: int = 1,
     rows_per_pos: int = 0,
+    quantized: bool = False,
 ):
     """Same running-state sweep as :func:`_decode_partials_kernel`, but the
     K/V tiles were block-selected through the block table (see the
     ``index_map``s in :func:`fusemax_decode_paged_pallas`); the kernel body
-    itself only needs the *logical* token index for ragged masking."""
+    itself only needs the *logical* token index for ragged masking.
+
+    With ``quantized=True`` two extra fp32 scale tiles ride along (same
+    block-table lookup, one scalar per (token, kv-head)) and the K/V tiles
+    are dequantized in-register right after the VMEM load — the score GEMM
+    and the cascade always run on fp32 operands."""
+    if quantized:
+        (ks_ref, vs_ref, pm_ref, pl_ref, pnv_ref,
+         m_scratch, l_scratch, acc_scratch) = refs
+    else:
+        ks_ref = vs_ref = None
+        (pm_ref, pl_ref, pnv_ref,
+         m_scratch, l_scratch, acc_scratch) = refs
     bh = pl.program_id(0)
     s = pl.program_id(1)
     m2 = pl.program_id(2)
@@ -285,6 +296,9 @@ def _paged_decode_partials_kernel(
         q_tile = q_ref[0].astype(jnp.float32)            # [G, E]
         k_tile = k_ref[0, :, 0].astype(jnp.float32)      # [block_k, E]
         v_tile = v_ref[0, :, 0].astype(jnp.float32)      # [block_k, F]
+        if ks_ref is not None:
+            k_tile = k_tile * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+            v_tile = v_tile * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
 
         sc = jax.lax.dot_general(
             q_tile, k_tile, (((1,), (1,)), ((), ())),
@@ -339,6 +353,8 @@ def fusemax_decode_paged_pallas(
     exp_impl: str = "native",
     interpret: bool = False,
     p: int = 1,
+    k_scale: Optional[jnp.ndarray] = None,   # [P, page_size, Hkv] fp32
+    v_scale: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Paged split-K FuseMax decode. Returns [BHkv, G, F] (q.dtype).
     With ``p > 1`` the G axis folds a verify chain (see the dense kernel).
@@ -347,6 +363,10 @@ def fusemax_decode_paged_pallas(
     looked up in the block table inside the ``index_map`` (standard paged
     attention: the gather happens in the pipeline's block fetch, never as
     a materialized [B, T, E] copy).
+
+    ``k_scale``/``v_scale`` (quantized pools) stream per-token fp32 scale
+    tiles through the same block-table ``index_map`` and the kernel
+    dequantizes in-register before the score GEMM.
     """
     bh, g, e = q.shape
     n_pages, page_size, hkv_p, f = v_pages.shape
@@ -368,6 +388,7 @@ def fusemax_decode_paged_pallas(
     m2 = split_pages * blocks_per_page
     grid = (bh, splits, m2)
 
+    quantized = k_scale is not None
     kernel = functools.partial(
         _paged_decode_partials_kernel,
         scale=scale,
@@ -379,6 +400,7 @@ def fusemax_decode_paged_pallas(
         exp_impl=exp_impl,
         n_pos=p,
         rows_per_pos=g // p,
+        quantized=quantized,
     )
 
     def _kv_index(bh_i, s, m2_i, kv_len_ref, bt_ref):
@@ -389,14 +411,28 @@ def fusemax_decode_paged_pallas(
         page = jnp.minimum(bt_ref[bh_i // hkv, page_slot], n_pages - 1)
         return (page, m2_i % blocks_per_page, bh_i % hkv, 0)
 
+    def _scale_index(bh_i, s, m2_i, kv_len_ref, bt_ref):
+        page_slot = s * split_pages + m2_i // blocks_per_page
+        page = jnp.minimum(bt_ref[bh_i // hkv, page_slot], n_pages - 1)
+        return (page, m2_i % blocks_per_page, bh_i % hkv)
+
+    in_specs = [
+        pl.BlockSpec((1, g, e), lambda b_i, s, m2_i, *_: (b_i, 0, 0)),
+        pl.BlockSpec((1, block_k, 1, e), _kv_index),
+        pl.BlockSpec((1, block_k, 1, f), _kv_index),
+    ]
+    operands = [q, k_pages, v_pages]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, block_k, 1), _scale_index),
+            pl.BlockSpec((1, block_k, 1), _scale_index),
+        ]
+        operands += [k_scale, v_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, g, e), lambda b_i, s, m2_i, *_: (b_i, 0, 0)),
-            pl.BlockSpec((1, block_k, 1, e), _kv_index),
-            pl.BlockSpec((1, block_k, 1, f), _kv_index),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, g, LANES),
                          lambda b_i, s, m2_i, *_: (b_i, s, 0, 0)),
@@ -425,7 +461,7 @@ def fusemax_decode_paged_pallas(
         ),
         interpret=interpret,
     )(kv_len.astype(jnp.int32), block_table.astype(jnp.int32),
-      q, k_pages, v_pages)
+      *operands)
 
     return _combine_partials(pm, pl_, pnv, q.dtype)
 
@@ -434,9 +470,7 @@ def _mla_paged_decode_partials_kernel(
     kv_len_ref,                     # SMEM scalar-prefetch: [B] int32
     bt_ref,                         # SMEM scalar-prefetch: [B, W] int32
     q_ref, ckv_ref, krope_ref,
-    pm_ref, pl_ref, pnv_ref,        # partial outputs per (b, s)
-    m_scratch, l_scratch, acc_scratch,
-    *,
+    *refs,                          # [cs_ref, krs_ref,] outputs, scratch
     scale: float,
     softcap: Optional[float],
     rank: int,
@@ -446,13 +480,26 @@ def _mla_paged_decode_partials_kernel(
     exp_impl: str,
     n_pos: int = 1,
     rows_per_pos: int = 0,
+    quantized: bool = False,
 ):
     """Latent-space (MLA absorbed-form) variant of
     :func:`_paged_decode_partials_kernel`.  The query tile carries the
     W_uk-absorbed queries concatenated with the rope queries
     ``[G, rank + rope_dim]``; the score against a latent page tile is the
     sum of two dots (latent and rope halves) and the value stream IS the
-    latent tile — the accumulator lives in rank-space."""
+    latent tile — the accumulator lives in rank-space.
+
+    With ``quantized=True`` two per-token fp32 scale tiles (one scalar
+    per latent vector / rope vector) ride along and the page tiles are
+    dequantized in-register right after the load — the dequantized latent
+    tile feeds both the score dot and the rank-space accumulator."""
+    if quantized:
+        (cs_ref, krs_ref, pm_ref, pl_ref, pnv_ref,
+         m_scratch, l_scratch, acc_scratch) = refs
+    else:
+        cs_ref = krs_ref = None
+        (pm_ref, pl_ref, pnv_ref,
+         m_scratch, l_scratch, acc_scratch) = refs
     b = pl.program_id(0)
     s = pl.program_id(1)
     m2 = pl.program_id(2)
@@ -472,6 +519,9 @@ def _mla_paged_decode_partials_kernel(
         q_tile = q_ref[0].astype(jnp.float32)            # [G, r + rope]
         ckv_tile = ckv_ref[0].astype(jnp.float32)        # [block_k, r]
         kr_tile = krope_ref[0].astype(jnp.float32)       # [block_k, rope]
+        if cs_ref is not None:
+            ckv_tile = ckv_tile * cs_ref[0].astype(jnp.float32)[:, None]
+            kr_tile = kr_tile * krs_ref[0].astype(jnp.float32)[:, None]
 
         sc = jax.lax.dot_general(
             q_tile[:, :rank], ckv_tile, (((1,), (1,)), ((), ())),
@@ -527,6 +577,8 @@ def fusemax_mla_decode_paged_pallas(
     exp_impl: str = "native",
     interpret: bool = False,
     p: int = 1,
+    ckv_scale: Optional[jnp.ndarray] = None,   # [P, page_size] fp32
+    krope_scale: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Paged split-K MLA decode in latent space. Returns [B, G, rank]
     (q.dtype) — the latent output, before the W_uv up-projection.
@@ -557,6 +609,7 @@ def fusemax_mla_decode_paged_pallas(
     m2 = split_pages * blocks_per_page
     grid = (b, splits, m2)
 
+    quantized = ckv_scale is not None
     kernel = functools.partial(
         _mla_paged_decode_partials_kernel,
         scale=scale,
@@ -568,6 +621,7 @@ def fusemax_mla_decode_paged_pallas(
         exp_impl=exp_impl,
         n_pos=p,
         rows_per_pos=g // p,
+        quantized=quantized,
     )
 
     def _page_index(b_i, s, m2_i, kv_len_ref, bt_ref):
@@ -575,16 +629,28 @@ def fusemax_mla_decode_paged_pallas(
         # sentinel ids (P) on unbacked slots clamp to the last page; the
         # kv_len mask in the body keeps their content out of the cascade
         page = jnp.minimum(bt_ref[b_i, page_slot], n_pages - 1)
-        return (page, m2_i % blocks_per_page, 0)
+        return (page, m2_i % blocks_per_page)
+
+    def _page_index3(b_i, s, m2_i, kv_len_ref, bt_ref):
+        return (*_page_index(b_i, s, m2_i, kv_len_ref, bt_ref), 0)
+
+    in_specs = [
+        pl.BlockSpec((1, g, e), lambda b_i, s, m2_i, *_: (b_i, 0, 0)),
+        pl.BlockSpec((1, block_k, rank), _page_index3),
+        pl.BlockSpec((1, block_k, rope_dim), _page_index3),
+    ]
+    operands = [q, ckv_pages, krope_pages]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, block_k), _page_index),
+            pl.BlockSpec((1, block_k), _page_index),
+        ]
+        operands += [ckv_scale, krope_scale]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, g, e), lambda b_i, s, m2_i, *_: (b_i, 0, 0)),
-            pl.BlockSpec((1, block_k, rank), _page_index),
-            pl.BlockSpec((1, block_k, rope_dim), _page_index),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, g, LANES),
                          lambda b_i, s, m2_i, *_: (b_i, s, 0, 0)),
@@ -613,6 +679,6 @@ def fusemax_mla_decode_paged_pallas(
         ),
         interpret=interpret,
     )(kv_len.astype(jnp.int32), block_table.astype(jnp.int32),
-      q, ckv_pages, krope_pages)
+      *operands)
 
     return _combine_partials(pm, pl_, pnv, q.dtype)

@@ -475,6 +475,8 @@ def fusemax_decode_paged(
     block_k: Optional[int] = None,
     exp_impl: str = "native",
     interpret: Optional[bool] = None,
+    k_scale: Optional[jnp.ndarray] = None,   # [P, page_size, Hkv] fp32
+    v_scale: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Single-token decode against a *paged* KV cache.
 
@@ -484,6 +486,13 @@ def fusemax_decode_paged(
     so outputs are bit-identical to :func:`fusemax_decode` over the dense
     layout.  The Pallas path runs the true paged kernel (block-table lookup
     in the index_map, page-aligned splits from the autotuner).
+
+    ``k_scale``/``v_scale`` mark the pools as quantized (fp8/int8 codes
+    with per-token-per-head fp32 scales): the jnp/ref paths dequantize the
+    gathered view before delegating, the Pallas path streams the scale
+    tiles into the kernel and dequantizes in-register before the score
+    GEMM.  Scale pools follow the same sentinel/clamp discipline as the
+    data pools, so masking by ``kv_len`` is unchanged.
 
     Shard contract (device-sharded pools): every computation here is
     independent per (batch, kv-head) fiber and the autotuned
@@ -510,6 +519,11 @@ def fusemax_decode_paged(
         cap = w * page_size if capacity is None else capacity
         k = jnp.moveaxis(gather_pages(k_pages, block_table), 2, 1)
         v = jnp.moveaxis(gather_pages(v_pages, block_table), 2, 1)
+        if k_scale is not None:
+            ks = jnp.moveaxis(gather_pages(k_scale, block_table), 2, 1)
+            vs = jnp.moveaxis(gather_pages(v_scale, block_table), 2, 1)
+            k = k.astype(jnp.float32) * ks.astype(jnp.float32)[..., None]
+            v = v.astype(jnp.float32) * vs.astype(jnp.float32)[..., None]
         return fusemax_decode(
             q, k[:, :, :cap], v[:, :, :cap], kv_len,
             softcap=softcap, scale=scale, impl=impl, splits=splits,
@@ -521,7 +535,8 @@ def fusemax_decode_paged(
     if splits is None or block_k is None:
         tuned = autotune.paged_decode_params(
             w, page_size, max(group, 8), e, f,
-            backend=jax.default_backend(), impl=impl)
+            backend=jax.default_backend(), impl=impl,
+            elem_bytes=jnp.dtype(k_pages.dtype).itemsize)
         splits = tuned.splits if splits is None else splits
         block_k = tuned.block_k if block_k is None else block_k
     splits = max(1, min(splits, w))
@@ -539,6 +554,7 @@ def fusemax_decode_paged(
         block_table, kv_len,
         scale=scale, softcap=softcap, hkv=hkv, splits=splits,
         block_k=block_k, exp_impl=exp_impl, interpret=interpret, p=p,
+        k_scale=k_scale, v_scale=v_scale,
     )
     return _unfold_decode_out(out, b, hkv, group, f, p=p)
 
@@ -669,6 +685,8 @@ def fusemax_mla_decode_paged(
     block_k: Optional[int] = None,
     exp_impl: str = "native",
     interpret: Optional[bool] = None,
+    ckv_scale: Optional[jnp.ndarray] = None,   # [P, page_size] fp32
+    krope_scale: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Single-token MLA decode against a paged *latent* cache.
 
@@ -700,6 +718,11 @@ def fusemax_mla_decode_paged(
     if impl in ("jnp", "ref"):
         ckv = gather_pages(ckv_pages, block_table)          # [B, W·ps, r]
         kr = gather_pages(krope_pages, block_table)
+        if ckv_scale is not None:
+            cs = gather_pages(ckv_scale, block_table)       # [B, W·ps]
+            ks = gather_pages(krope_scale, block_table)
+            ckv = ckv.astype(jnp.float32) * cs.astype(jnp.float32)[..., None]
+            kr = kr.astype(jnp.float32) * ks.astype(jnp.float32)[..., None]
         if impl == "ref":
             k = jnp.concatenate([ckv, kr], axis=-1)[:, None]
             v = ckv[:, None]
@@ -721,7 +744,8 @@ def fusemax_mla_decode_paged(
     if splits is None or block_k is None:
         tuned = autotune.mla_paged_decode_params(
             w, page_size, max(hq, 8), rank, rope_dim,
-            backend=jax.default_backend(), impl=impl)
+            backend=jax.default_backend(), impl=impl,
+            elem_bytes=jnp.dtype(ckv_pages.dtype).itemsize)
         splits = tuned.splits if splits is None else splits
         block_k = tuned.block_k if block_k is None else block_k
     splits = max(1, min(splits, w))
@@ -739,6 +763,7 @@ def fusemax_mla_decode_paged(
         block_table, kv_len,
         scale=scale, softcap=softcap, splits=splits, block_k=block_k,
         exp_impl=exp_impl, interpret=interpret, p=p,
+        ckv_scale=ckv_scale, krope_scale=krope_scale,
     )
     return _unfold_decode_out(out, b, 1, hq, rank, p=p)
 

@@ -40,6 +40,17 @@ completed drafts from the original's indexed stream and verifies
 near-perfectly.  The proposer's n-gram table is cleared between
 ``--repeats`` (like the prefix index) so a warm table can't memorize the
 re-served trace and report fake acceptance.
+``--pool-mb M`` sizes the paged pool by a *byte* budget instead of a
+page count (num_pages = budget // bytes_per_page, so a cheaper page
+dtype honestly buys capacity).  ``--kv-dtype fp8_e4m3|int8`` stores the
+K/V (and MLA latent) pages quantized with parallel fp16 per-token scale
+pools, served as an extra ``paged_quant`` leg that is *excluded* from
+outputs_match — its greedy drift vs the full-width ``paged`` leg is
+reported under ``quant_quality`` instead.  ``--host-swap-gb G`` adds a
+host-RAM swap tier under the prefix index (LRU evictions demote pages
+to host, prefix hits promote them back; ``paged_swap`` leg, lossless
+and therefore *inside* outputs_match) — see EXPERIMENTS.md
+"Quantized KV pages + host-memory swap tier".
 """
 from __future__ import annotations
 
@@ -100,7 +111,14 @@ def _parse_mesh(arg: Optional[str]):
 
 def _serve_one_layout(args, cfg, params, rt, layout: str,
                       prefix_caching: bool = True, mesh=None,
-                      speculate: Optional[int] = None) -> dict:
+                      speculate: Optional[int] = None,
+                      kv_dtype: Optional[str] = None,
+                      host_swap_bytes: int = 0) -> dict:
+    pool_bytes = None
+    if layout == "paged" and getattr(args, "pool_mb", None):
+        # byte-denominated pool budget: quantized legs get proportionally
+        # more pages out of the same budget — the honest capacity A/B
+        pool_bytes = int(args.pool_mb * (1 << 20))
     engine = ServeEngine(cfg, params, slots=args.slots,
                          max_len=args.max_len, rt=rt,
                          temperature=args.temperature,
@@ -111,6 +129,9 @@ def _serve_one_layout(args, cfg, params, rt, layout: str,
                          num_pages=args.num_pages,
                          prefix_caching=prefix_caching,
                          speculate=speculate,
+                         kv_dtype=kv_dtype,
+                         pool_bytes=pool_bytes,
+                         host_swap_bytes=host_swap_bytes,
                          mesh=mesh)
     lens = _trace_lens(args)
     warmup_s = None
@@ -281,8 +302,30 @@ def serve_bench(args) -> dict:
             args, cfg, params, rt, "paged",
             prefix_caching=not args.no_prefix_cache, mesh=mesh)
         layouts = layouts + ["paged_sharded"]
+    swap_bytes = int((getattr(args, "host_swap_gb", 0) or 0) * (1 << 30))
+    if swap_bytes and "paged" in per_layout:
+        # host swap tier is lossless (pages round-trip bit-exact through
+        # host RAM), so this leg joins outputs_match
+        per_layout["paged_swap"] = _serve_one_layout(
+            args, cfg, params, rt, "paged",
+            prefix_caching=not args.no_prefix_cache, speculate=spec,
+            host_swap_bytes=swap_bytes)
+        layouts = layouts + ["paged_swap"]
+    quant_leg = None
+    if getattr(args, "kv_dtype", None) and "paged" in per_layout:
+        # quantized pages change numerics, so this leg is EXCLUDED from
+        # outputs_match; its greedy-stream drift vs the bf16/f32 paged leg
+        # is measured and reported as quant_quality instead.  With
+        # --host-swap-gb it also carries the swap tier — the full capacity
+        # stack the CI stress leg exercises.
+        quant_leg = "paged_quant"
+        per_layout[quant_leg] = _serve_one_layout(
+            args, cfg, params, rt, "paged",
+            prefix_caching=not args.no_prefix_cache, speculate=spec,
+            kv_dtype=args.kv_dtype, host_swap_bytes=swap_bytes)
+        layouts = layouts + [quant_leg]
 
-    outputs = [per_layout[lo].pop("_outputs") for lo in layouts]
+    outputs = {lo: per_layout[lo].pop("_outputs") for lo in layouts}
     metrics = {
         "arch": args.arch,
         "requests": args.requests,
@@ -300,10 +343,31 @@ def serve_bench(args) -> dict:
                     if k not in ("cache_layout",)})
     metrics["cache_layout"] = args.cache_layout
     metrics["shared_prefix_len"] = args.shared_prefix_len
+    metrics["kv_dtype"] = getattr(args, "kv_dtype", None)
+    metrics["pool_mb"] = getattr(args, "pool_mb", None)
+    metrics["host_swap_gb"] = getattr(args, "host_swap_gb", 0) or 0
     metrics["layouts"] = per_layout
-    if len(layouts) >= 2:
-        metrics["outputs_match"] = all(o == outputs[0]
-                                       for o in outputs[1:])
+    match_legs = [lo for lo in layouts if lo != quant_leg]
+    if len(match_legs) >= 2:
+        metrics["outputs_match"] = all(
+            outputs[lo] == outputs[match_legs[0]]
+            for lo in match_legs[1:])
+    if quant_leg is not None:
+        # greedy-stream drift of the quantized leg vs the exact paged leg:
+        # positionwise token match rate + how many whole streams survived
+        ref, q = outputs["paged"], outputs[quant_leg]
+        tot = hit = exact = 0
+        for a, b in zip(ref, q):
+            tot += max(len(a), len(b))
+            hit += sum(1 for x, y in zip(a, b) if x == y)
+            exact += int(a == b)
+        metrics["quant_quality"] = {
+            "kv_dtype": args.kv_dtype,
+            "vs_layout": "paged",
+            "token_match_rate": round(hit / max(1, tot), 4),
+            "exact_streams": exact,
+            "streams": len(ref),
+        }
     if "dense" in per_layout and "paged" in per_layout:
         d, p = per_layout["dense"], per_layout["paged"]
         metrics["paged_vs_dense_tok_per_s"] = round(
@@ -380,6 +444,23 @@ def main(argv=None) -> dict:
                          "(cycling over the originals) — the "
                          "popular-query traffic where cross-request "
                          "drafting gets real acceptance")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=("fp8_e4m3", "int8"),
+                    help="store paged K/V quantized (per-page fp32 scales "
+                         "in a parallel pool; kernels dequantize "
+                         "in-register): adds a 'paged_quant' leg excluded "
+                         "from outputs_match, with greedy-stream drift vs "
+                         "the exact paged leg under 'quant_quality'")
+    ap.add_argument("--pool-mb", type=float, default=None,
+                    help="full-class pool budget in MiB (paged layout, "
+                         "overrides --num-pages): quantized legs get "
+                         "proportionally more pages from the same bytes")
+    ap.add_argument("--host-swap-gb", type=float, default=0,
+                    help="host-RAM swap tier budget in GiB: evicted "
+                         "prefix pages demote to host instead of "
+                         "dropping, and a later hit promotes them back "
+                         "(DMA instead of recompute); adds a lossless "
+                         "'paged_swap' leg to outputs_match")
     ap.add_argument("--mesh", default=None,
                     help="shard the paged pool across devices: tp=N "
                          "partitions every page array's kv-head / "
@@ -414,6 +495,13 @@ def main(argv=None) -> dict:
               f"({mem['bytes_per_live_token']} B/live-token), "
               f"physical {mem['physical_cache_bytes']} B, "
               f"preemptions {m['preemptions']}")
+        ht = mem.get("host_tier")
+        if ht and ht.get("enabled"):
+            print(f"    host swap tier: {ht['demotions']} demotions, "
+                  f"{ht['promotions']} promotions (hit rate "
+                  f"{ht['promote_hit_rate']:.2f}), {ht['host_drops']} "
+                  f"drops, {ht['demoted_pages']} pages "
+                  f"({ht['demoted_bytes']} B) resident on host")
         sh = mem.get("sharding")
         if sh:
             pd = sh["per_device"]
@@ -435,6 +523,11 @@ def main(argv=None) -> dict:
               f"{metrics['outputs_match']}"
               + (f" (paged/dense tok/s = {ratio})" if ratio is not None
                  else ""))
+    qq = metrics.get("quant_quality")
+    if qq:
+        print(f"  quantized leg ({qq['kv_dtype']}): token match rate "
+              f"{qq['token_match_rate']} vs {qq['vs_layout']}, "
+              f"{qq['exact_streams']}/{qq['streams']} streams exact")
     sp = metrics.get("speculation")
     if sp:
         print(f"  speculation k={sp['k']}: accept rate "

@@ -103,6 +103,73 @@ def write_pages(pages: jnp.ndarray, bt_rows: jnp.ndarray,
         values.astype(pages.dtype), mode="drop")
 
 
+# ---------------------------------------------------------------------------
+# KV-page quantization
+#
+# Quantized pools store pages in a narrow dtype (fp8_e4m3 / int8) plus a
+# parallel fp16 *scale pool* shaped like the data pages minus the trailing
+# feature axis — per-token-per-head for GQA ([P, ps, Hkv]), per-token for
+# MLA latents ([P, ps]).  Scales store as fp16 (values quantize against
+# the *rounded* scale, so the round-trip is still exact on representable
+# values; fp16's ~5e-4 relative scale error is dwarfed by fp8's ~4%
+# quantization noise) — at head_dim 32 fp32 scales alone would cost 12.5%
+# of the bf16 footprint.  Quantization is symmetric per token over the
+# feature axis (amax / qmax); dequantization happens at the read site
+# (inside the paged kernels / against the gathered table view), never in
+# storage — COW copies, swap blobs, and the prefix hash all see raw
+# quantized bytes, so the host-side paging machinery is unchanged.
+# ---------------------------------------------------------------------------
+
+def kv_quant_dtype(kv_dtype: Optional[str]):
+    """Resolve a ``kv_dtype`` name to a jnp storage dtype (None → None)."""
+    if kv_dtype is None:
+        return None
+    if kv_dtype == "fp8_e4m3":
+        dt = getattr(jnp, "float8_e4m3fn", None)
+        if dt is None:
+            raise ValueError(
+                "kv_dtype='fp8_e4m3' needs a jax build with float8_e4m3fn")
+        return jnp.dtype(dt)
+    if kv_dtype == "int8":
+        return jnp.dtype(jnp.int8)
+    raise ValueError(f"unknown kv_dtype {kv_dtype!r} (fp8_e4m3 | int8)")
+
+
+def _kv_qmax(qdtype) -> float:
+    """Largest representable magnitude of the storage dtype (the
+    quantization grid endpoint): 448 for fp8 e4m3, 127 for int8."""
+    return 127.0 if jnp.dtype(qdtype) == jnp.dtype(jnp.int8) else 448.0
+
+
+def quantize_kv(values: jnp.ndarray, qdtype):
+    """Symmetric per-token quantization over the trailing feature axis.
+
+    values: [..., feat] → (q [..., feat] in ``qdtype``, scale [...] fp16)
+    with ``scale = amax / qmax`` (all-zero tokens get scale 1 so the
+    round-trip stays exact).  The scale is rounded to its fp16 storage
+    precision *before* quantizing, so q · stored-scale reproduces
+    representable values exactly; a floor at the smallest fp16 subnormal
+    keeps near-zero tokens from dividing by zero.  int8 rounds to
+    nearest; fp8 relies on the cast's native rounding.
+    """
+    v32 = values.astype(jnp.float32)
+    qmax = _kv_qmax(qdtype)
+    amax = jnp.max(jnp.abs(v32), axis=-1)
+    scale = jnp.where(amax > 0.0, amax / qmax, 1.0).astype(jnp.float16)
+    scale = jnp.maximum(scale, jnp.finfo(jnp.float16).smallest_subnormal)
+    q = v32 / scale.astype(jnp.float32)[..., None]
+    if jnp.dtype(qdtype) == jnp.dtype(jnp.int8):
+        q = jnp.round(q)
+    return jnp.clip(q, -qmax, qmax).astype(qdtype), scale
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray,
+                  dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of :func:`quantize_kv`: q [..., feat] × scale [...]."""
+    return (q.astype(jnp.float32) *
+            scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
 def ring_write_masked(kc: jnp.ndarray, vc: jnp.ndarray,
                       k_new: jnp.ndarray, v_new: jnp.ndarray,
                       off: int, true_len: jnp.ndarray
@@ -311,10 +378,17 @@ def gqa_decode(
 # ---------------------------------------------------------------------------
 
 def gqa_init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
-                         dtype) -> dict:
+                         dtype, kv_dtype: Optional[str] = None) -> dict:
     shape = (num_pages, page_size, cfg.n_kv_heads, cfg.dh)
-    return {"k_pages": jnp.zeros(shape, dtype),
-            "v_pages": jnp.zeros(shape, dtype)}
+    qdt = kv_quant_dtype(kv_dtype)
+    if qdt is None:
+        return {"k_pages": jnp.zeros(shape, dtype),
+                "v_pages": jnp.zeros(shape, dtype)}
+    # quantized pool: narrow data pages + per-token-per-head fp16 scales
+    return {"k_pages": jnp.zeros(shape, qdt),
+            "v_pages": jnp.zeros(shape, qdt),
+            "k_scale": jnp.ones(shape[:-1], jnp.float16),
+            "v_scale": jnp.ones(shape[:-1], jnp.float16)}
 
 
 def _gqa_capacity(cache: dict, bt_rows: jnp.ndarray,
@@ -330,17 +404,24 @@ def _gqa_paged_attend(
     q: jnp.ndarray, k_new: jnp.ndarray, v_new: jnp.ndarray,
     k_pages: jnp.ndarray, v_pages: jnp.ndarray, bt_rows: jnp.ndarray,
     off: int, cap: int, cfg: ModelConfig, spec: LayerSpec, rt: Runtime,
+    k_scale: Optional[jnp.ndarray] = None,
+    v_scale: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Attention for a paged prefill chunk, *before* the chunk's writes
     land: queries [off, off+S) attend the cached history (gathered through
     the block-table rows) plus the chunk's own fresh K/V.  Returns the
     pre-output-projection attention output [B, H, S, F].
 
+    Quantized pools pass their scale pools (``k_scale``/``v_scale``,
+    [P, ps, Hkv]); the gathered history is dequantized here, and the
+    caller supplies quant-round-tripped fresh K/V so the chunk attends
+    exactly the values later reads will reconstruct.
+
     Every operation is independent per kv-head fiber, so this body runs
-    unchanged on a kv-head *shard* of (q, k_new, v_new, pages) under
-    ``shard_map`` — the per-head arithmetic (and the autotuned tiles,
-    which depend only on lengths and the unchanged head-group ratio) is
-    bit-identical to the full-head call."""
+    unchanged on a kv-head *shard* of (q, k_new, v_new, pages, scales)
+    under ``shard_map`` — the per-head arithmetic (and the autotuned
+    tiles, which depend only on lengths and the unchanged head-group
+    ratio) is bit-identical to the full-head call."""
     if off == 0:
         # no history: attend the chunk itself (matches gqa_forward)
         return fusemax_attention(
@@ -357,6 +438,15 @@ def _gqa_paged_attend(
             gather_pages(k_pages, bt_rows[:, :hp]), 2, 1)[:, :, :off]
         v_hist = jnp.moveaxis(
             gather_pages(v_pages, bt_rows[:, :hp]), 2, 1)[:, :, :off]
+        if k_scale is not None:
+            k_hist = dequantize_kv(
+                k_hist, jnp.moveaxis(
+                    gather_pages(k_scale, bt_rows[:, :hp]), 2, 1)[:, :, :off],
+                k_new.dtype)
+            v_hist = dequantize_kv(
+                v_hist, jnp.moveaxis(
+                    gather_pages(v_scale, bt_rows[:, :hp]), 2, 1)[:, :, :off],
+                v_new.dtype)
         # chunk K/V rounded to the cache dtype first — the dense path reads
         # them back out of the cache it just wrote
         return fusemax_attention(
@@ -376,6 +466,13 @@ def _gqa_paged_attend(
     pg = bt_rows[:, l // page_size]                      # [B, band]
     k_hist = jnp.moveaxis(k_pages[pg, l % page_size], 1, 2)
     v_hist = jnp.moveaxis(v_pages[pg, l % page_size], 1, 2)
+    if k_scale is not None:
+        k_hist = dequantize_kv(
+            k_hist, jnp.moveaxis(k_scale[pg, l % page_size], 1, 2),
+            k_new.dtype)
+        v_hist = dequantize_kv(
+            v_hist, jnp.moveaxis(v_scale[pg, l % page_size], 1, 2),
+            v_new.dtype)
     return fusemax_attention(
         q, jnp.concatenate([k_hist, k_new], axis=2),
         jnp.concatenate([v_hist, v_new], axis=2),
@@ -385,6 +482,25 @@ def _gqa_paged_attend(
         exp_impl=rt.exp_impl, interpret=rt.interpret,
         unroll_scan=rt.unroll_runs,
     )
+
+
+def _gqa_quant_new(cache: dict, k_new: jnp.ndarray, v_new: jnp.ndarray):
+    """Quantize a chunk's fresh K/V ([B, Hkv, S, dh]) against the pool's
+    storage dtype → (k_q, k_s, v_q, v_s, k_att, v_att): raw quantized
+    values + per-token-per-head scales for the page writes, plus the
+    round-tripped attend views (what later reads will reconstruct).
+    Unquantized pools return the inputs unchanged with None scales.
+    Quantization is per-(token, head), so a kv-head shard of the outputs
+    equals quantizing the shard — callers may slice these under
+    ``shard_map`` and stay bit-identical to the unsharded pool."""
+    if "k_scale" not in cache:
+        return k_new, None, v_new, None, k_new, v_new
+    qdt = cache["k_pages"].dtype
+    k_q, k_s = quantize_kv(k_new, qdt)
+    v_q, v_s = quantize_kv(v_new, qdt)
+    return (k_q, k_s, v_q, v_s,
+            dequantize_kv(k_q, k_s, k_new.dtype),
+            dequantize_kv(v_q, v_s, v_new.dtype))
 
 
 def gqa_prefill_paged(
@@ -420,6 +536,44 @@ def gqa_prefill_paged(
     shard = rt.kv_shard
     if shard is not None:
         q, k_new, v_new = _proj_qkv(p, x, cfg, positions, rt)
+        k_q, k_s, v_q, v_s, k_att, v_att = _gqa_quant_new(cache, k_new,
+                                                          v_new)
+        pspec = shard.spec(4, -2)                        # pages: Hkv axis
+        hspec = shard.spec(4, 1)                         # [B, H*, S, E]
+        rep = shard.replicated
+
+        if k_s is not None:
+            sspec = shard.spec(3, -1)                    # scales: Hkv axis
+            hspec3 = shard.spec(3, 1)                    # [B, Hkv, S]
+
+            def local_q(kp, vp, ksp, vsp, q_l, ka_l, va_l, kq_l, vq_l,
+                        ks_l, vs_l, bt, pos_b, val):
+                out = _gqa_paged_attend(q_l, ka_l, va_l, kp, vp, bt, off,
+                                        cap, cfg, spec, rt,
+                                        k_scale=ksp, v_scale=vsp)
+                kp = write_pages(kp, bt, pos_b, jnp.moveaxis(kq_l, 1, 2),
+                                 cap, val)
+                vp = write_pages(vp, bt, pos_b, jnp.moveaxis(vq_l, 1, 2),
+                                 cap, val)
+                ksp = write_pages(ksp, bt, pos_b, jnp.moveaxis(ks_l, 1, 2),
+                                  cap, val)
+                vsp = write_pages(vsp, bt, pos_b, jnp.moveaxis(vs_l, 1, 2),
+                                  cap, val)
+                out = jax.lax.all_gather(out, shard.axis, axis=1,
+                                         tiled=True)
+                return out, kp, vp, ksp, vsp
+
+            out, k_pages, v_pages, k_sc, v_sc = shard_map_fn()(
+                local_q, mesh=shard.mesh,
+                in_specs=(pspec, pspec, sspec, sspec, hspec, hspec, hspec,
+                          hspec, hspec, hspec3, hspec3, rep, rep, rep),
+                out_specs=(rep, pspec, pspec, sspec, sspec),
+            )(cache["k_pages"], cache["v_pages"], cache["k_scale"],
+              cache["v_scale"], q, k_att, v_att, k_q, v_q, k_s, v_s,
+              bt_rows, positions, valid)
+            y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
+            return y, {"k_pages": k_pages, "v_pages": v_pages,
+                       "k_scale": k_sc, "v_scale": v_sc}
 
         def local(kp, vp, q_l, kn_l, vn_l, bt, pos_b, val):
             out = _gqa_paged_attend(q_l, kn_l, vn_l, kp, vp, bt, off, cap,
@@ -431,9 +585,6 @@ def gqa_prefill_paged(
             out = jax.lax.all_gather(out, shard.axis, axis=1, tiled=True)
             return out, kp, vp
 
-        pspec = shard.spec(4, -2)                        # pages: Hkv axis
-        hspec = shard.spec(4, 1)                         # [B, H*, S, E]
-        rep = shard.replicated
         out, k_pages, v_pages = shard_map_fn()(
             local, mesh=shard.mesh,
             in_specs=(pspec, pspec, hspec, hspec, hspec, rep, rep, rep),
@@ -446,18 +597,31 @@ def gqa_prefill_paged(
     if off == 0:
         y = gqa_forward(p, x, cfg, spec, rt)
         _, k_new, v_new = _proj_qkv(p, x, cfg, positions, rt)
+        k_q, k_s, v_q, v_s, _, _ = _gqa_quant_new(cache, k_new, v_new)
     else:
         q, k_new, v_new = _proj_qkv(p, x, cfg, positions, rt)
-        out = _gqa_paged_attend(q, k_new, v_new, cache["k_pages"],
+        k_q, k_s, v_q, v_s, k_att, v_att = _gqa_quant_new(cache, k_new,
+                                                          v_new)
+        out = _gqa_paged_attend(q, k_att, v_att, cache["k_pages"],
                                 cache["v_pages"], bt_rows, off, cap, cfg,
-                                spec, rt)
+                                spec, rt, k_scale=cache.get("k_scale"),
+                                v_scale=cache.get("v_scale"))
         y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
 
-    k_pages = write_pages(cache["k_pages"], bt_rows, positions,
-                          jnp.moveaxis(k_new, 1, 2), cap, valid)
-    v_pages = write_pages(cache["v_pages"], bt_rows, positions,
-                          jnp.moveaxis(v_new, 1, 2), cap, valid)
-    return y, {"k_pages": k_pages, "v_pages": v_pages}
+    new_cache = {
+        "k_pages": write_pages(cache["k_pages"], bt_rows, positions,
+                               jnp.moveaxis(k_q, 1, 2), cap, valid),
+        "v_pages": write_pages(cache["v_pages"], bt_rows, positions,
+                               jnp.moveaxis(v_q, 1, 2), cap, valid),
+    }
+    if k_s is not None:
+        new_cache["k_scale"] = write_pages(
+            cache["k_scale"], bt_rows, positions,
+            jnp.moveaxis(k_s, 1, 2), cap, valid)
+        new_cache["v_scale"] = write_pages(
+            cache["v_scale"], bt_rows, positions,
+            jnp.moveaxis(v_s, 1, 2), cap, valid)
+    return y, new_cache
 
 
 def gqa_decode_paged(
@@ -485,8 +649,51 @@ def gqa_decode_paged(
         eff_len = kv_len
         capacity = None
 
+    k_q, k_s, v_q, v_s, _, _ = _gqa_quant_new(cache, k_new, v_new)
+
     shard = rt.kv_shard
     if shard is not None:
+        pspec = shard.spec(4, -2)
+        hspec = shard.spec(4, 1)
+        rep = shard.replicated
+
+        if k_s is not None:
+            sspec = shard.spec(3, -1)
+            hspec3 = shard.spec(3, 1)
+
+            def local_q(kp, vp, ksp, vsp, q_l, kq_l, vq_l, ks_l, vs_l, bt,
+                        pos_b, val, el):
+                kp = write_pages(kp, bt, pos_b, jnp.moveaxis(kq_l, 1, 2),
+                                 cap, val)
+                vp = write_pages(vp, bt, pos_b, jnp.moveaxis(vq_l, 1, 2),
+                                 cap, val)
+                ksp = write_pages(ksp, bt, pos_b, jnp.moveaxis(ks_l, 1, 2),
+                                  cap, val)
+                vsp = write_pages(vsp, bt, pos_b, jnp.moveaxis(vs_l, 1, 2),
+                                  cap, val)
+                out = fusemax_decode_paged(
+                    q_l, kp, vp, bt, el,
+                    capacity=capacity, softcap=cfg.attn_softcap,
+                    impl=rt.attn_impl, splits=rt.decode_splits,
+                    exp_impl=rt.exp_impl, interpret=rt.interpret,
+                    k_scale=ksp, v_scale=vsp,
+                )
+                out = jax.lax.all_gather(out, shard.axis, axis=1,
+                                         tiled=True)
+                return out, kp, vp, ksp, vsp
+
+            out, k_pages, v_pages, k_sc, v_sc = shard_map_fn()(
+                local_q, mesh=shard.mesh,
+                in_specs=(pspec, pspec, sspec, sspec, hspec, hspec, hspec,
+                          hspec3, hspec3, rep, rep, rep, rep),
+                out_specs=(rep, pspec, pspec, sspec, sspec),
+            )(cache["k_pages"], cache["v_pages"], cache["k_scale"],
+              cache["v_scale"], q, k_q, v_q, k_s, v_s, bt_rows, pos,
+              valid, eff_len)
+            y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
+            return y, {"k_pages": k_pages, "v_pages": v_pages,
+                       "k_scale": k_sc, "v_scale": v_sc}
+
         def local(kp, vp, q_l, kn_l, vn_l, bt, pos_b, val, el):
             kp = write_pages(kp, bt, pos_b, jnp.moveaxis(kn_l, 1, 2), cap,
                              val)
@@ -501,9 +708,6 @@ def gqa_decode_paged(
             out = jax.lax.all_gather(out, shard.axis, axis=1, tiled=True)
             return out, kp, vp
 
-        pspec = shard.spec(4, -2)
-        hspec = shard.spec(4, 1)
-        rep = shard.replicated
         out, k_pages, v_pages = shard_map_fn()(
             local, mesh=shard.mesh,
             in_specs=(pspec, pspec, hspec, hspec, hspec, rep, rep, rep,
@@ -514,21 +718,32 @@ def gqa_decode_paged(
         y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
         return y, {"k_pages": k_pages, "v_pages": v_pages}
 
-    k_pages = write_pages(cache["k_pages"], bt_rows, pos,
-                          jnp.moveaxis(k_new, 1, 2), cap, valid)
-    v_pages = write_pages(cache["v_pages"], bt_rows, pos,
-                          jnp.moveaxis(v_new, 1, 2), cap, valid)
+    new_cache = {
+        "k_pages": write_pages(cache["k_pages"], bt_rows, pos,
+                               jnp.moveaxis(k_q, 1, 2), cap, valid),
+        "v_pages": write_pages(cache["v_pages"], bt_rows, pos,
+                               jnp.moveaxis(v_q, 1, 2), cap, valid),
+    }
+    if k_s is not None:
+        new_cache["k_scale"] = write_pages(
+            cache["k_scale"], bt_rows, pos, jnp.moveaxis(k_s, 1, 2), cap,
+            valid)
+        new_cache["v_scale"] = write_pages(
+            cache["v_scale"], bt_rows, pos, jnp.moveaxis(v_s, 1, 2), cap,
+            valid)
     out = fusemax_decode_paged(
-        q, k_pages, v_pages, bt_rows, eff_len,
+        q, new_cache["k_pages"], new_cache["v_pages"], bt_rows, eff_len,
         capacity=capacity,
         softcap=cfg.attn_softcap,
         impl=rt.attn_impl,
         splits=rt.decode_splits,
         exp_impl=rt.exp_impl,
         interpret=rt.interpret,
+        k_scale=new_cache.get("k_scale"),
+        v_scale=new_cache.get("v_scale"),
     )                                                    # [B, H, 1, dh]
     y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
-    return y, {"k_pages": k_pages, "v_pages": v_pages}
+    return y, new_cache
 
 
 def gqa_verify(
@@ -585,20 +800,32 @@ def gqa_verify_paged(
     cap = _gqa_capacity(cache, bt_rows, spec)
     valid = (jnp.arange(pq)[None] < span[:, None]) & (kv_len > 0)[:, None]
 
-    k_pages = write_pages(cache["k_pages"], bt_rows, pos,
-                          jnp.moveaxis(k_new, 1, 2), cap, valid)
-    v_pages = write_pages(cache["v_pages"], bt_rows, pos,
-                          jnp.moveaxis(v_new, 1, 2), cap, valid)
+    k_q, k_s, v_q, v_s, _, _ = _gqa_quant_new(cache, k_new, v_new)
+    new_cache = {
+        "k_pages": write_pages(cache["k_pages"], bt_rows, pos,
+                               jnp.moveaxis(k_q, 1, 2), cap, valid),
+        "v_pages": write_pages(cache["v_pages"], bt_rows, pos,
+                               jnp.moveaxis(v_q, 1, 2), cap, valid),
+    }
+    if k_s is not None:
+        new_cache["k_scale"] = write_pages(
+            cache["k_scale"], bt_rows, pos, jnp.moveaxis(k_s, 1, 2), cap,
+            valid)
+        new_cache["v_scale"] = write_pages(
+            cache["v_scale"], bt_rows, pos, jnp.moveaxis(v_s, 1, 2), cap,
+            valid)
     out = fusemax_decode_paged(
-        q, k_pages, v_pages, bt_rows, kv_len,
+        q, new_cache["k_pages"], new_cache["v_pages"], bt_rows, kv_len,
         softcap=cfg.attn_softcap,
         impl=rt.attn_impl,
         splits=rt.decode_splits,
         exp_impl=rt.exp_impl,
         interpret=rt.interpret,
+        k_scale=new_cache.get("k_scale"),
+        v_scale=new_cache.get("v_scale"),
     )                                                    # [B, H, P, dh]
     y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
-    return y, {"k_pages": k_pages, "v_pages": v_pages}
+    return y, new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -841,12 +1068,52 @@ def mla_verify(
 # ---------------------------------------------------------------------------
 
 def mla_init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
-                         dtype) -> dict:
+                         dtype, kv_dtype: Optional[str] = None) -> dict:
     m = cfg.mla
+    qdt = kv_quant_dtype(kv_dtype)
+    if qdt is None:
+        return {
+            "ckv_pages": jnp.zeros((num_pages, page_size, m.kv_lora_rank),
+                                   dtype),
+            "krope_pages": jnp.zeros((num_pages, page_size, m.rope_dim),
+                                     dtype),
+        }
+    # quantized latent pool: per-token fp16 scales over the full vector
     return {
-        "ckv_pages": jnp.zeros((num_pages, page_size, m.kv_lora_rank),
-                               dtype),
-        "krope_pages": jnp.zeros((num_pages, page_size, m.rope_dim), dtype),
+        "ckv_pages": jnp.zeros((num_pages, page_size, m.kv_lora_rank), qdt),
+        "krope_pages": jnp.zeros((num_pages, page_size, m.rope_dim), qdt),
+        "ckv_scale": jnp.ones((num_pages, page_size), jnp.float16),
+        "krope_scale": jnp.ones((num_pages, page_size), jnp.float16),
+    }
+
+
+def _mla_quant_new(cache: dict, ckv_new: jnp.ndarray,
+                   krope_new: jnp.ndarray):
+    """Quantize a chunk's fresh latents ([B, S, r] / [B, S, rd]) against
+    the pool's storage dtype → (ckv_q, ckv_s, kr_q, kr_s) with per-token
+    scales over the full vector; unquantized pools pass through with None
+    scales.  The scale reduction crosses the rank axis, so under a
+    rank-sharded pool this MUST run outside ``shard_map`` on the full
+    replicated values (each device then slices the identical quantized
+    array — bit-identical to the unsharded pool by construction)."""
+    if "ckv_scale" not in cache:
+        return ckv_new, None, krope_new, None
+    qdt = cache["ckv_pages"].dtype
+    ckv_q, ckv_s = quantize_kv(ckv_new, qdt)
+    kr_q, kr_s = quantize_kv(krope_new, qdt)
+    return ckv_q, ckv_s, kr_q, kr_s
+
+
+def _mla_write_scales(cache: dict, bt_rows, positions, ckv_s, kr_s, cap,
+                      valid) -> dict:
+    """Scatter per-token latent scales into the (replicated) scale pools.
+    Runs outside any ``shard_map`` — the [P, ps] scale pools carry no
+    rank axis, so every device holds the full copy."""
+    return {
+        "ckv_scale": write_pages(cache["ckv_scale"], bt_rows, positions,
+                                 ckv_s, cap, valid),
+        "krope_scale": write_pages(cache["krope_scale"], bt_rows,
+                                   positions, kr_s, cap, valid),
     }
 
 
@@ -883,6 +1150,12 @@ def mla_prefill_paged(
     # gather only the pages the prefix + chunk occupy (tot is static)
     hp = -(-tot // cache["ckv_pages"].shape[1])
 
+    # quantization (full-vector scales) and the replicated scale-pool
+    # writes happen outside any shard_map — see the helpers' contracts
+    ckv_q, ckv_s, kr_q, kr_s = _mla_quant_new(cache, ckv_new, krope_new)
+    scale_new = {} if ckv_s is None else _mla_write_scales(
+        cache, bt_rows, positions, ckv_s, kr_s, cap, valid)
+
     shard = rt.kv_shard
     if shard is not None:
         def local(cp, krp, cn_l, kn_l, bt, pos_b, val):
@@ -904,26 +1177,38 @@ def mla_prefill_paged(
             local, mesh=shard.mesh,
             in_specs=(pspec, pspec, pspec, pspec, rep, rep, rep),
             out_specs=outs,
-        )(cache["ckv_pages"], cache["krope_pages"], ckv_new, krope_new,
+        )(cache["ckv_pages"], cache["krope_pages"], ckv_q, kr_q,
           bt_rows, positions, valid)
         if off == 0:
             ckv_pages, krope_pages = got
             y = mla_forward(p, x, cfg, spec, rt)
-            return y, {"ckv_pages": ckv_pages, "krope_pages": krope_pages}
+            return y, {"ckv_pages": ckv_pages,
+                       "krope_pages": krope_pages, **scale_new}
         ckv_pages, krope_pages, ckv, krope = got
     else:
         ckv_pages = write_pages(cache["ckv_pages"], bt_rows, positions,
-                                ckv_new, cap, valid)
+                                ckv_q, cap, valid)
         krope_pages = write_pages(cache["krope_pages"], bt_rows, positions,
-                                  krope_new, cap, valid)
+                                  kr_q, cap, valid)
         if off == 0:
             y = mla_forward(p, x, cfg, spec, rt)
-            return y, {"ckv_pages": ckv_pages, "krope_pages": krope_pages}
+            return y, {"ckv_pages": ckv_pages,
+                       "krope_pages": krope_pages, **scale_new}
         ckv = gather_pages(ckv_pages, bt_rows[:, :hp])[:, :tot]
         krope = gather_pages(krope_pages, bt_rows[:, :hp])[:, :tot]
+    if ckv_s is not None:
+        # the gathered view includes the chunk just written, so dequant
+        # against the *updated* scale pools
+        ckv = dequantize_kv(
+            ckv, gather_pages(scale_new["ckv_scale"],
+                              bt_rows[:, :hp])[:, :tot], dt)
+        krope = dequantize_kv(
+            krope, gather_pages(scale_new["krope_scale"],
+                                bt_rows[:, :hp])[:, :tot], dt)
     out = _mla_absorbed_attend(p, q_nope, q_rope, ckv, krope, off, cfg, rt)
     y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(dt))
-    return y, {"ckv_pages": ckv_pages, "krope_pages": krope_pages}
+    return y, {"ckv_pages": ckv_pages, "krope_pages": krope_pages,
+               **scale_new}
 
 
 def mla_decode_paged(
@@ -966,17 +1251,31 @@ def mla_decode_paged(
     q_eff = jnp.einsum("bhse,rhe->bhsr", q_nope, p["w_uk"].astype(dt))
     q_cat = jnp.concatenate([q_eff, q_rope], axis=-1)    # [B,H,1,r+rd]
 
+    # latent scales span the full (sharded) rank axis, so quantization
+    # and the replicated scale-pool writes happen outside shard_map
+    ckv_q, ckv_s, kr_q, kr_s = _mla_quant_new(cache, ckv_new, krope_new)
+    scale_new = {} if ckv_s is None else _mla_write_scales(
+        cache, bt_rows, pos, ckv_s, kr_s, cap, valid)
+
     shard = rt.kv_shard
     if shard is not None:
         sp = w // shard.size                 # pages swept per device
 
-        def local(cp, krp, cn_l, kn_l, qc, bt, pos_b, val, kvl):
+        def local(cp, krp, cn_l, kn_l, qc, bt, pos_b, val, kvl,
+                  csp=None, krsp=None):
             cp = write_pages(cp, bt, pos_b, cn_l, cap, val)
             krp = write_pages(krp, bt, pos_b, kn_l, cap, val)
             ckv = jax.lax.all_gather(gather_pages(cp, bt), shard.axis,
                                      axis=2, tiled=True)
             kr = jax.lax.all_gather(gather_pages(krp, bt), shard.axis,
                                     axis=2, tiled=True)
+            if csp is not None:
+                # scale pools are replicated [P, ps]; the all-gathered
+                # views are rank-complete, so dequant matches unsharded
+                ckv = dequantize_kv(ckv, gather_pages(csp, bt),
+                                    jnp.float32)
+                kr = dequantize_kv(kr, gather_pages(krsp, bt),
+                                   jnp.float32)
             d = jax.lax.axis_index(shard.axis)
             pm, pl_, pnv = mla_decode_partials(
                 qc, ckv, kr, kvl, start_page=d * sp, n_splits=sp,
@@ -988,27 +1287,35 @@ def mla_decode_paged(
 
         pspec = shard.spec(3, -1)
         rep = shard.replicated
+        specs = [pspec, pspec, pspec, pspec, rep, rep, rep, rep, rep]
+        operands = [cache["ckv_pages"], cache["krope_pages"], ckv_q, kr_q,
+                    q_cat, bt_rows, pos, valid, kv_len]
+        if scale_new:
+            specs += [rep, rep]
+            operands += [scale_new["ckv_scale"], scale_new["krope_scale"]]
         out_lat, ckv_pages, krope_pages = shard_map_fn()(
             local, mesh=shard.mesh,
-            in_specs=(pspec, pspec, pspec, pspec, rep, rep, rep, rep, rep),
+            in_specs=tuple(specs),
             out_specs=(rep, pspec, pspec),
-        )(cache["ckv_pages"], cache["krope_pages"], ckv_new, krope_new,
-          q_cat, bt_rows, pos, valid, kv_len)
+        )(*operands)
     else:
-        ckv_pages = write_pages(cache["ckv_pages"], bt_rows, pos, ckv_new,
+        ckv_pages = write_pages(cache["ckv_pages"], bt_rows, pos, ckv_q,
                                 cap, valid)
         krope_pages = write_pages(cache["krope_pages"], bt_rows, pos,
-                                  krope_new, cap, valid)
+                                  kr_q, cap, valid)
         out_lat = fusemax_mla_decode_paged(
             q_cat, ckv_pages, krope_pages, bt_rows, kv_len,
             scale=scale, softcap=cfg.attn_softcap,
+            ckv_scale=scale_new.get("ckv_scale"),
+            krope_scale=scale_new.get("krope_scale"),
             impl=rt.attn_impl,
             exp_impl=rt.exp_impl,
             interpret=rt.interpret,
         )                                                # [B,H,1,r]
     out = jnp.einsum("bhsr,rhe->bhse", out_lat, p["w_uv"].astype(dt))
     y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(dt))
-    return y, {"ckv_pages": ckv_pages, "krope_pages": krope_pages}
+    return y, {"ckv_pages": ckv_pages, "krope_pages": krope_pages,
+               **scale_new}
 
 
 def mla_verify_paged(
@@ -1034,17 +1341,23 @@ def mla_verify_paged(
     q_eff = jnp.einsum("bhse,rhe->bhsr", q_nope, p["w_uk"].astype(dt))
     q_cat = jnp.concatenate([q_eff, q_rope], axis=-1)    # [B,H,P,r+rd]
 
-    ckv_pages = write_pages(cache["ckv_pages"], bt_rows, pos, ckv_new,
+    ckv_q, ckv_s, kr_q, kr_s = _mla_quant_new(cache, ckv_new, krope_new)
+    scale_new = {} if ckv_s is None else _mla_write_scales(
+        cache, bt_rows, pos, ckv_s, kr_s, cap, valid)
+    ckv_pages = write_pages(cache["ckv_pages"], bt_rows, pos, ckv_q,
                             cap, valid)
     krope_pages = write_pages(cache["krope_pages"], bt_rows, pos,
-                              krope_new, cap, valid)
+                              kr_q, cap, valid)
     out_lat = fusemax_mla_decode_paged(
         q_cat, ckv_pages, krope_pages, bt_rows, kv_len,
         scale=scale, softcap=cfg.attn_softcap,
+        ckv_scale=scale_new.get("ckv_scale"),
+        krope_scale=scale_new.get("krope_scale"),
         impl=rt.attn_impl,
         exp_impl=rt.exp_impl,
         interpret=rt.interpret,
     )                                                    # [B,H,P,r]
     out = jnp.einsum("bhsr,rhe->bhse", out_lat, p["w_uv"].astype(dt))
     y = jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(dt))
-    return y, {"ckv_pages": ckv_pages, "krope_pages": krope_pages}
+    return y, {"ckv_pages": ckv_pages, "krope_pages": krope_pages,
+               **scale_new}

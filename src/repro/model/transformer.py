@@ -399,18 +399,21 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
 
 
 def layer_init_paged_cache(cfg: ModelConfig, spec: LayerSpec, slots: int,
-                           num_pages: dict, page_size: int, dtype) -> dict:
+                           num_pages: dict, page_size: int, dtype,
+                           kv_dtype: str | None = None) -> dict:
     """Paged counterpart of :func:`layer_init_cache`: attention K/V live in
     page pools (``num_pages`` keyed like the block tables — "full" /
-    "w<window>"); SSM state stays per-slot dense (it is O(1) per slot)."""
+    "w<window>"); SSM state stays per-slot dense (it is O(1) per slot).
+    ``kv_dtype`` ("fp8_e4m3" | "int8" | None) stores the pools quantized
+    with parallel fp32 scale pools — see the attention init helpers."""
     cache = {}
     if spec.attn == "gqa":
         cache["attn"] = attn_mod.gqa_init_paged_cache(
             cfg, num_pages[attn_mod.paged_cache_key(spec)], page_size,
-            dtype)
+            dtype, kv_dtype=kv_dtype)
     elif spec.attn == "mla":
         cache["attn"] = attn_mod.mla_init_paged_cache(
-            cfg, num_pages["full"], page_size, dtype)
+            cfg, num_pages["full"], page_size, dtype, kv_dtype=kv_dtype)
     if spec.ssm == "mamba":
         cache["ssm"] = ssm_mod.mamba_init_state(cfg, slots, dtype)
     elif spec.ssm == "mlstm":
@@ -421,7 +424,7 @@ def layer_init_paged_cache(cfg: ModelConfig, spec: LayerSpec, slots: int,
 
 
 def init_paged_cache(cfg: ModelConfig, slots: int, num_pages: dict,
-                     page_size: int, dtype):
+                     page_size: int, dtype, kv_dtype: str | None = None):
     """Per-run paged caches mirroring :func:`init_cache`'s tree structure
     (stacked over repeats), so the scan/unroll machinery and donation work
     unchanged.  Every layer owns its own page storage; the block tables
@@ -441,7 +444,7 @@ def init_paged_cache(cfg: ModelConfig, slots: int, num_pages: dict,
         pos = []
         for spec in pattern:
             c1 = layer_init_paged_cache(cfg, spec, slots, num_pages,
-                                        page_size, dtype)
+                                        page_size, dtype, kv_dtype)
             if reps > 1:
                 c1 = jax.tree.map(
                     lambda a: jnp.broadcast_to(a, (reps, *a.shape)).copy(),

@@ -220,9 +220,18 @@ class ServeEngine:
                  num_pages: Optional[int] = None,
                  prefix_caching: bool = True,
                  speculate: Optional[int] = None,
+                 kv_dtype: Optional[str] = None,
+                 pool_bytes: Optional[int] = None,
+                 host_swap_bytes: int = 0,
                  mesh=None, shard_axis: str = "model"):
         if cache_layout not in ("dense", "paged"):
             raise ValueError(f"unknown cache_layout: {cache_layout!r}")
+        if cache_layout != "paged" and (kv_dtype is not None
+                                        or pool_bytes is not None
+                                        or host_swap_bytes):
+            raise ValueError(
+                "kv_dtype / pool_bytes / host_swap_bytes quantize and swap "
+                "*pages* — they require cache_layout='paged'")
         shard = None
         if mesh is not None and shard_axis not in mesh.axis_names:
             raise ValueError(
@@ -286,8 +295,15 @@ class ServeEngine:
                                    page_size=page_size,
                                    num_pages=num_pages,
                                    prefix_caching=prefix_caching,
+                                   kv_dtype=kv_dtype,
+                                   pool_bytes=pool_bytes,
+                                   host_swap_bytes=host_swap_bytes,
                                    shard=shard)
             self.caches = self.kv.caches
+            # the swap tier snapshots page contents at demotion time; hand
+            # it a live view of the engine's current cache pytree (COW and
+            # the decode loop rebind self.caches every dispatch)
+            self.kv.cache_source = lambda: self.caches
             if shard is not None and any(
                     s.attn == "mla" for s in cfg.layer_specs()):
                 w = self.kv.classes["full"].table_width
@@ -580,6 +596,11 @@ class ServeEngine:
                 info = self.kv.admit(i, tokens, len(tokens) + 1)
                 if info is None:
                     break                # head-of-line waits for pages
+                if info["promotes"]:
+                    # host→HBM DMA for the matched demoted suffix; must
+                    # land before any COW copy or prefill reads the pages
+                    self.caches = self.kv.apply_promote(
+                        self.caches, info["promotes"])
                 cached = info["cached_len"]
                 cow_pairs = info["cow_pairs"]
                 if info["reused"]:

@@ -79,7 +79,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.distributed import sharding as shd
 from repro.model import transformer as tf
-from repro.model.attention import paged_cache_key
+from repro.model.attention import kv_quant_dtype, paged_cache_key
 
 
 def _ceil_div(a: int, b: int) -> int:
@@ -188,10 +188,18 @@ class _PrefixEntry:
     every token up to and including this page, so matching a prompt is a
     walk from the root; ``parent`` is the previous page's chain hash
     (None at depth 0).  The index holds its own pool reference on
-    ``page`` — the page outlives the slot that wrote it."""
+    ``page`` — the page outlives the slot that wrote it.
+
+    With the host swap tier, an entry may be *demoted*: ``page == -1``
+    and ``host`` holds the page's content (one numpy array per full-class
+    layer leaf, in deterministic leaf order) in host RAM.  Demoted
+    entries stay matchable through the index; a prefix hit promotes them
+    back into freshly allocated pool pages (a DMA instead of a
+    recompute)."""
     page: int
     parent: Optional[int]
     last_used: int
+    host: Optional[list] = None
 
 
 class PagedKVCache:
@@ -214,7 +222,10 @@ class PagedKVCache:
                  *, page_size: int = 16,
                  num_pages: Optional[int] = None,
                  prefix_caching: bool = True,
-                 shard: Optional[shd.KVShard] = None):
+                 shard: Optional[shd.KVShard] = None,
+                 kv_dtype: Optional[str] = None,
+                 pool_bytes: Optional[int] = None,
+                 host_swap_bytes: int = 0):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         if max_len % page_size:
@@ -232,9 +243,13 @@ class PagedKVCache:
         if self.shard is not None:
             shd.validate_kv_shard(cfg, self.shard.size)
 
-        # capacity classes present in this architecture
+        # capacity classes present in this architecture; scale elems are
+        # the parallel fp16 scale-pool entries of a quantized pool (one
+        # scalar per token per kv head for GQA, one per latent vector and
+        # one per rope vector for MLA)
         caps: Dict[str, int] = {}
         per_layer_page_elems: Dict[str, int] = {}
+        per_layer_scale_elems: Dict[str, int] = {}
         has_ssm = has_moe = False
         for spec in cfg.layer_specs():
             if spec.mlp == "moe":
@@ -245,20 +260,36 @@ class PagedKVCache:
                     else max_len
                 per_layer_page_elems[key] = per_layer_page_elems.get(key, 0) \
                     + 2 * page_size * cfg.n_kv_heads * cfg.dh
+                per_layer_scale_elems[key] = \
+                    per_layer_scale_elems.get(key, 0) \
+                    + 2 * page_size * cfg.n_kv_heads
             elif spec.attn == "mla":
                 caps["full"] = max_len
                 per_layer_page_elems["full"] = \
                     per_layer_page_elems.get("full", 0) + page_size * (
                         cfg.mla.kv_lora_rank + cfg.mla.rope_dim)
+                per_layer_scale_elems["full"] = \
+                    per_layer_scale_elems.get("full", 0) + 2 * page_size
             if spec.ssm is not None:
                 has_ssm = True
 
-        itemsize = jnp.dtype(dtype).itemsize
+        qdt = kv_quant_dtype(kv_dtype)
+        self.kv_dtype = kv_dtype
+        itemsize = jnp.dtype(dtype).itemsize if qdt is None \
+            else jnp.dtype(qdt).itemsize
         self.classes: Dict[str, _CacheClass] = {}
         pool_sizes: Dict[str, int] = {}
         for key, cap in caps.items():
             width = _ceil_div(cap, page_size)
-            if key == "full" and num_pages is not None:
+            # honest per-page bytes: quantized data plus its fp16 scales
+            bpp = per_layer_page_elems[key] * itemsize
+            if qdt is not None:
+                bpp += per_layer_scale_elems[key] * 2
+            if key == "full" and pool_bytes is not None:
+                # byte-budget sizing: a quantized pool gets ~4× the pages
+                # of a fp32 pool from the same budget
+                n = max(1, pool_bytes // bpp)
+            elif key == "full" and num_pages is not None:
                 n = num_pages
             else:
                 n = slots * width            # dense-equivalent capacity
@@ -272,7 +303,7 @@ class PagedKVCache:
                 # kv_len; writes drop via scatter mode="drop")
                 table=np.full((slots, width), n, np.int32),
                 owned=[[] for _ in range(slots)],
-                bytes_per_page=per_layer_page_elems[key] * itemsize,
+                bytes_per_page=bpp,
                 scratch=[[] for _ in range(slots)],
             )
 
@@ -290,10 +321,23 @@ class PagedKVCache:
         self._prefix: Dict[int, _PrefixEntry] = {}
         self._prefix_tick = 0
         self._cow_fns: Dict[str, object] = {}
-        self.stats = {"prefix_evictions": 0}
+        self.stats = {"prefix_evictions": 0, "demotions": 0,
+                      "promotions": 0, "host_drops": 0, "reregistered": 0}
+
+        # host swap tier: under pool pressure, index-only prefix pages are
+        # demoted to host RAM (up to ``host_swap_bytes``) instead of
+        # dropped, and promoted back on a prefix hit.  ``cache_source``
+        # must be wired by the owner (the engine points it at its live
+        # cache tree) before demotion can snapshot page contents; without
+        # it eviction falls back to the plain LRU drop.
+        self.host_swap_bytes = int(host_swap_bytes)
+        self.swap_enabled = self.host_swap_bytes > 0 and self.prefix_enabled
+        self._host_bytes = 0
+        self.cache_source = None
+        self._promote_jit = None
 
         self.caches = tf.init_paged_cache(cfg, slots, pool_sizes, page_size,
-                                          dtype)
+                                          dtype, kv_dtype)
         self._shardings = None
         if self.shard is not None:
             # pages split along the kv-head (GQA) / latent-rank (MLA) axis;
@@ -334,7 +378,7 @@ class PagedKVCache:
         if key != "full" or not self.prefix_enabled:
             return 0
         return sum(1 for e in self._prefix.values()
-                   if c.pool.refcount(e.page) == 1)
+                   if e.page >= 0 and c.pool.refcount(e.page) == 1)
 
     def can_grow(self, slot: int, kv_target: int) -> bool:
         return all(
@@ -525,6 +569,17 @@ class PagedKVCache:
         for i, h in enumerate(hashes):
             e = self._prefix.get(h)
             if e is not None:
+                if e.page < 0 and i < len(row):
+                    # a fresh prefill just rebuilt this demoted page's
+                    # content on device: re-point the entry at the
+                    # resident copy and drop the host blob (a free
+                    # promotion — no DMA, the recompute already happened)
+                    self.classes["full"].pool.ref(row[i])
+                    e.page = row[i]
+                    e.host = None
+                    self._host_bytes -= \
+                        self.classes["full"].bytes_per_page
+                    self.stats["reregistered"] += 1
                 e.last_used = self._tick()
                 continue
             self.classes["full"].pool.ref(row[i])
@@ -532,20 +587,85 @@ class PagedKVCache:
                 page=row[i], parent=hashes[i - 1] if i else None,
                 last_used=self._tick())
 
+    def _page_blobs(self, page: int) -> list:
+        """device_get one page's content across every full-class layer
+        leaf (data pools and, when quantized, scale pools) in the engine's
+        live cache tree — deterministic leaf order (run/position order,
+        sorted leaf names) shared with :meth:`_promote_fn`."""
+        caches = self.cache_source()
+        blobs = []
+        for (pattern, reps), cache_run in zip(self.cfg.runs(), caches):
+            for spec, c1 in zip(pattern, cache_run):
+                full = (spec.attn == "mla") or (
+                    spec.attn == "gqa"
+                    and paged_cache_key(spec) == "full")
+                if not full or "attn" not in c1:
+                    continue
+                for name in sorted(c1["attn"]):
+                    a = c1["attn"][name]
+                    blobs.append(jax.device_get(
+                        a[:, page] if reps > 1 else a[page]))
+        return blobs
+
+    def _drop_subtree(self, c: _CacheClass, root: int) -> None:
+        """Drop an index entry and every descendant (they are matchable
+        only through it): resident pages drop their index reference, host
+        blobs release their swap-tier bytes."""
+        stack = [root]
+        while stack:
+            h = stack.pop()
+            e = self._prefix.pop(h, None)
+            if e is None:
+                continue
+            stack.extend(h2 for h2, e2 in self._prefix.items()
+                         if e2.parent == h)
+            if e.page >= 0:
+                c.pool.unref(e.page)
+                self.stats["prefix_evictions"] += 1
+            else:
+                self._host_bytes -= c.bytes_per_page
+                self.stats["host_drops"] += 1
+
+    def _host_make_room(self, c: _CacheClass, bytes_needed: int,
+                        exclude: frozenset) -> bool:
+        """Last rung of the HBM → host → drop eviction ordering: drop LRU
+        demoted chains until ``bytes_needed`` more bytes fit under the
+        host byte cap."""
+        while self._host_bytes + bytes_needed > self.host_swap_bytes:
+            victim = None
+            for h, e in self._prefix.items():
+                if h in exclude or e.page >= 0:
+                    continue
+                if victim is None or \
+                        e.last_used < self._prefix[victim].last_used:
+                    victim = h
+            if victim is None:
+                return False
+            self._drop_subtree(c, victim)
+        return True
+
     def _evict_prefix(self, c: _CacheClass, need: int,
                       protect: frozenset = frozenset()) -> bool:
         """Free index-only pages (LRU) until ``need`` pages are free.
-        Evicting an entry drops its whole subtree — descendants are only
-        matchable through it; their pages survive if a live slot still
-        references them.  Entries in ``protect`` (e.g. the chain an
+        Evicting an entry takes its whole subtree along — descendants are
+        only matchable through it; their pages survive if a live slot
+        still references them.  Entries in ``protect`` (e.g. the chain an
         in-flight admission just matched but has not ref'd yet) are never
         chosen as victims; since every ancestor of a protected entry is
         itself protected (chains are matched from the root), no protected
-        entry can fall inside an evicted subtree either."""
+        entry can fall inside an evicted subtree either.
+
+        With the host swap tier active the subtree is *demoted* — page
+        contents device_get into host blobs, entries kept in the index
+        with ``page = -1`` — so a later prefix hit turns into a DMA
+        promotion instead of a recompute.  When the subtree does not fit
+        under the host cap even after dropping LRU demoted chains, it
+        falls back to the plain drop (eviction ordering HBM → host →
+        drop)."""
         while c.pool.free_pages < need:
             victim = None
             for h, e in self._prefix.items():
-                if h in protect:
+                if h in protect or e.page < 0:
                     continue
                 if c.pool.refcount(e.page) == 1 and (
                         victim is None
@@ -553,26 +673,43 @@ class PagedKVCache:
                     victim = h
             if victim is None:
                 return False
-            stack = [victim]
+            stack, subtree = [victim], []
             while stack:
                 h = stack.pop()
-                e = self._prefix.pop(h, None)
-                if e is None:
+                if h not in self._prefix or h in subtree:
                     continue
+                subtree.append(h)
                 stack.extend(h2 for h2, e2 in self._prefix.items()
                              if e2.parent == h)
-                c.pool.unref(e.page)
-                self.stats["prefix_evictions"] += 1
+            resident = [h for h in subtree if self._prefix[h].page >= 0]
+            demote = (self.swap_enabled and self.cache_source is not None
+                      and self._host_make_room(
+                          c, len(resident) * c.bytes_per_page,
+                          exclude=protect | frozenset(subtree)))
+            if demote:
+                for h in resident:
+                    e = self._prefix[h]
+                    e.host = self._page_blobs(e.page)
+                    c.pool.unref(e.page)
+                    e.page = -1
+                    self._host_bytes += c.bytes_per_page
+                    self.stats["demotions"] += 1
+            else:
+                self._drop_subtree(c, victim)
         return True
 
     def clear_prefix(self) -> int:
         """Drop every index entry (e.g. after engine warmup, or to drain
-        the pool).  Returns the number of entries dropped."""
+        the pool).  Drains the host swap tier too — demoted entries must
+        not survive a clear (warmup must never leave demoted warmup pages
+        resident in host RAM).  Returns the number of entries dropped."""
         n = len(self._prefix)
         c = self.classes.get("full")
         for e in self._prefix.values():
-            c.pool.unref(e.page)
+            if e.page >= 0:
+                c.pool.unref(e.page)
         self._prefix.clear()
+        self._host_bytes = 0
         return n
 
     def _match(self, hashes: List[int]) -> int:
@@ -604,13 +741,23 @@ class PagedKVCache:
         earlier group has dispatched and before this slot's own prefill
         (the pair holds a pool reference on the source page until then).
 
+        When the matched chain ends in host-demoted entries (swap tier),
+        those pages are promoted: a fresh pool page is allocated per
+        demoted entry and a ``(dst_page, host_blobs)`` instruction is
+        returned under ``"promotes"`` — the engine must apply them via
+        :meth:`apply_promote` *before* :meth:`apply_cow` and before this
+        slot's prefill.  If the pool cannot hold the promotions even
+        after eviction, the match falls back to the resident prefix and
+        the demoted tail stays on the host tier.
+
         All-or-nothing: returns None (state unchanged) when the pool is
         short even after LRU eviction; otherwise
-        ``{"cached_len", "reused", "cow_pairs"}``."""
+        ``{"cached_len", "reused", "cow_pairs", "promotes"}``."""
         if not self.prefix_enabled:
             if not self.grow(slot, kv_target):
                 return None
-            return {"cached_len": 0, "reused": 0, "cow_pairs": []}
+            return {"cached_len": 0, "reused": 0, "cow_pairs": [],
+                    "promotes": []}
 
         c = self.classes["full"]
         if c.owned[slot] or c.scratch[slot]:
@@ -618,16 +765,42 @@ class PagedKVCache:
         n_tok = len(tokens)
         hashes = self._chain_hashes(tokens)
         m = self._match(hashes)
-        cow = m > 0 and m * self.page_size == n_tok
-        cached_len = n_tok - 1 if cow else m * self.page_size
+        # demotion is subtree-wise, so the demoted part of the matched
+        # chain is a contiguous tail after the resident prefix
+        n_res = 0
+        while n_res < m and self._prefix[hashes[n_res]].page >= 0:
+            n_res += 1
+        n_dem = 0
+        while n_res + n_dem < m and \
+                self._prefix[hashes[n_res + n_dem]].page < 0:
+            n_dem += 1
+        m = n_res + n_dem
         need_width = self.pages_needed("full", kv_target)
-        fresh = need_width - m + (1 if cow else 0)
-        if fresh > c.pool.free_pages and not self._evict_prefix(
-                c, fresh, protect=frozenset(hashes[:m])):
+        while True:
+            cow = m > 0 and m * self.page_size == n_tok
+            cached_len = n_tok - 1 if cow else m * self.page_size
+            fresh = need_width - m + (1 if cow else 0)
+            if fresh + n_dem <= c.pool.free_pages or self._evict_prefix(
+                    c, fresh + n_dem, protect=frozenset(hashes[:m])):
+                break
+            if n_dem:
+                # not enough pages to promote the demoted tail: fall back
+                # to the resident prefix (the tail stays on the host tier)
+                m, n_dem = n_res, 0
+                continue
             return None
+        prom = c.pool.alloc(n_dem) if n_dem else []
         got = c.pool.alloc(fresh)
-        if got is None:                      # pragma: no cover - guarded
+        if got is None or prom is None:      # pragma: no cover - guarded
             return None
+        promotes = []
+        for j, h in enumerate(hashes[n_res:m]):
+            e = self._prefix[h]
+            e.page = prom[j]                 # alloc's reference becomes
+            promotes.append((prom[j], e.host))   # the index's own
+            e.host = None
+            self._host_bytes -= c.bytes_per_page
+            self.stats["promotions"] += 1
         shared = []
         for h in hashes[:m]:
             e = self._prefix[h]
@@ -650,7 +823,8 @@ class PagedKVCache:
         self._touch_peaks()
         return {"cached_len": cached_len,
                 "reused": cached_len if m else 0,
-                "cow_pairs": cow_pairs}
+                "cow_pairs": cow_pairs,
+                "promotes": promotes}
 
     def _cow_fn(self, key: str):
         """Jit'd ``pages[dst] = pages[src]`` over every layer of a class,
@@ -686,6 +860,61 @@ class PagedKVCache:
                 caches, jnp.asarray(src, jnp.int32),
                 jnp.asarray(dst, jnp.int32))
             self.classes[key].pool.unref(src)
+        return caches
+
+    def _promote_fn(self):
+        """Jit'd ``pages[dst] = host_blob`` over every full-class layer
+        leaf, donated + sharding-pinned like :meth:`_cow_fn` so a
+        promotion is an in-place page DMA, not a pool reallocation."""
+        fn = self._promote_jit
+        if fn is None:
+            donate = (0,) if jax.default_backend() != "cpu" else ()
+
+            def run(caches, blobs, dst):
+                i = 0
+                out = []
+                for (pattern, reps), cache_run in zip(self.cfg.runs(),
+                                                      caches):
+                    pos = []
+                    for spec, c1 in zip(pattern, cache_run):
+                        full = (spec.attn == "mla") or (
+                            spec.attn == "gqa"
+                            and paged_cache_key(spec) == "full")
+                        if not full or "attn" not in c1:
+                            pos.append(c1)
+                            continue
+                        attn = dict(c1["attn"])
+                        for name in sorted(attn):
+                            a = attn[name]
+                            attn[name] = (a.at[:, dst].set(blobs[i])
+                                          if reps > 1
+                                          else a.at[dst].set(blobs[i]))
+                            i += 1
+                        c2 = dict(c1)
+                        c2["attn"] = attn
+                        pos.append(c2)
+                    out.append(pos)
+                if self._shardings is not None:
+                    out = jax.tree.map(
+                        jax.lax.with_sharding_constraint, out,
+                        self._shardings)
+                return out
+
+            fn = jax.jit(run, donate_argnums=donate)
+            self._promote_jit = fn
+        return fn
+
+    def apply_promote(self, caches,
+                      promotes: List[Tuple[int, list]]):
+        """Materialize host→device promotions scheduled by :meth:`admit`
+        (``pages[dst] = host blob`` for every full-class layer leaf, in
+        the :meth:`_page_blobs` leaf order).  Must run *before*
+        :meth:`apply_cow` for the same admission batch — a COW source may
+        itself be a just-promoted page.  Returns the rebuilt tree."""
+        for dst, blobs in promotes:
+            caches = self._promote_fn()(
+                caches, [jnp.asarray(b) for b in blobs],
+                jnp.asarray(dst, jnp.int32))
         return caches
 
     # -- accounting ---------------------------------------------------------
@@ -732,6 +961,7 @@ class PagedKVCache:
         prefix_pages = len(self._prefix)
         prefix_only = 0 if full is None else \
             self._evictable_pages("full", full)
+        demoted = sum(1 for e in self._prefix.values() if e.page < 0)
         sharding = None
         if self.shard is not None:
             tp = self.shard.size
@@ -747,6 +977,7 @@ class PagedKVCache:
             }
         return {
             "page_size": self.page_size,
+            "kv_dtype": self.kv_dtype,
             "num_pages": {k: c.pool.num_pages
                           for k, c in self.classes.items()},
             "pages_in_use": self.pages_in_use,
@@ -769,5 +1000,17 @@ class PagedKVCache:
                 "reusable_prefix_bytes": 0 if full is None else
                     prefix_only * full.bytes_per_page,
                 "evictions": self.stats["prefix_evictions"],
+            },
+            "host_tier": {
+                "enabled": self.swap_enabled,
+                "capacity_bytes": self.host_swap_bytes,
+                "demoted_pages": demoted,
+                "demoted_bytes": self._host_bytes,
+                "demotions": self.stats["demotions"],
+                "promotions": self.stats["promotions"],
+                "host_drops": self.stats["host_drops"],
+                "reregistered": self.stats["reregistered"],
+                "promote_hit_rate": self.stats["promotions"]
+                    / max(1, self.stats["demotions"]),
             },
         }

@@ -70,7 +70,8 @@ def test_prefix_disabled_for_windowed_and_ssm_configs():
                       page_size=16, prefix_caching=True)
     assert not kv.prefix_supported and not kv.prefix_enabled
     info = kv.admit(0, np.arange(20, dtype=np.int32), 21)
-    assert info == {"cached_len": 0, "reused": 0, "cow_pairs": []}
+    assert info == {"cached_len": 0, "reused": 0, "cow_pairs": [],
+                    "promotes": []}
     kv.release(0, tokens=np.arange(20, dtype=np.int32))
     assert all(v == 0 for v in kv.pages_in_use.values())
 

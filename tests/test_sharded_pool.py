@@ -196,6 +196,47 @@ def test_sharded_preemption_tiny_pool_matches_unsharded():
     assert "PREEMPT-SHARDED-OK" in out
 
 
+def test_sharded_swap_tier_matches_unsharded():
+    """Host swap tier on a tp=2 sharded pool: demotion snapshots the
+    sharded page leaves, promotion rebuilds them under the pool's
+    sharding constraints — demote→promote→hit streams match the
+    unsharded swap engine exactly, with the same swap counters."""
+    out = run_sub("""
+        cfg = get_config("stablelm-1.6b-smoke")
+        params, _ = tf.init(cfg, jax.random.PRNGKey(0), rt)
+        rng = np.random.default_rng(9)
+        pa = rng.integers(0, cfg.vocab, 24).astype(np.int32)
+        pb = rng.integers(0, cfg.vocab, 40).astype(np.int32)
+
+        def serve_swap(mesh):
+            eng = ServeEngine(cfg, params, slots=2, max_len=64, rt=rt,
+                              decode_chunk=4, cache_layout="paged",
+                              page_size=8, num_pages=8,
+                              host_swap_bytes=1 << 30, mesh=mesh)
+            streams = []
+            for rid, p in enumerate((pa, pb, pa)):
+                r = Request(rid=rid, prompt=p, max_new_tokens=4)
+                eng.submit(r)
+                eng.run()
+                streams.append(list(r.generated))
+            return streams, eng
+
+        o0, e0 = serve_swap(None)
+        o1, e1 = serve_swap(make_mesh((2,), ("model",)))
+        assert o0 == o1, (o0, o1)
+        for e in (e0, e1):
+            assert e.kv.stats["demotions"] >= 3, e.kv.stats
+            assert e.kv.stats["promotions"] >= 3, e.kv.stats
+        assert e0.kv.stats == e1.kv.stats, (e0.kv.stats, e1.kv.stats)
+        # promoted page leaves keep the pool's sharding
+        leaf = e1.kv.caches[0][0]["attn"]["k_pages"]
+        local = leaf.addressable_shards[0].data
+        assert local.size * 2 == leaf.size, (local.shape, leaf.shape)
+        print("SWAP-SHARDED-OK", e1.kv.stats["promotions"])
+    """, devices=2)
+    assert "SWAP-SHARDED-OK" in out
+
+
 def test_uneven_axis_engine_raises():
     """granite smoke has a single kv head: a tp=4 mesh cannot shard it —
     the engine must refuse up front (never silently replicate), and the
