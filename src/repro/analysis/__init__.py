@@ -1,1 +1,4 @@
-"""Analysis: roofline from compiled artifacts + the paper's accelerator model."""
+"""Analysis: roofline from compiled artifacts, the paper's accelerator
+model, and the Einsum-cascade analyzer (pass-count lower bounds, live
+footprint proofs, kernel-structure lint — ``python -m
+repro.analysis.report --check``)."""

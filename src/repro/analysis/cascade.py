@@ -1,0 +1,168 @@
+"""Registry of declared Einsum cascades for every shipped kernel family.
+
+The declarations themselves are co-located with the kernels
+(:mod:`repro.kernels.ref`, :mod:`repro.kernels.fusemax`,
+:mod:`repro.kernels.decode`) and with the numeric taxonomy
+(:mod:`repro.core.cascades_numeric`); this module binds each one to its
+*expected* analysis results — pass count over the sequence rank M,
+live-footprint class, taxonomy bucket — and to the structural lint probes
+that cross-check the declaration against the actual implementation.
+
+``python -m repro.analysis.report --check`` walks this registry and fails
+(non-zero exit) on any mismatch; the CI lint job runs it as a hard gate,
+so a new kernel family must declare its cascade here (ROADMAP rule) and
+the declaration must both *analyze* to the claimed bounds and *match* the
+implementation's structure before it can land.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Tuple
+
+from repro.core.cascades_numeric import attention_2pass as _attention_2pass
+from repro.core.einsum import Cascade
+from repro.core.taxonomy import attention_2pass as _cascade_2pass
+from repro.kernels.decode import (
+    decode_paged_cascade,
+    decode_splitk_cascade,
+    mla_decode_paged_cascade,
+    mla_verify_chain_cascade,
+    verify_chain_cascade,
+)
+from repro.kernels.fusemax import prefill_cascade
+from repro.kernels.ops import KERNEL_CASCADES
+from repro.kernels.ref import reference_cascade
+
+O1 = "O(1)"
+OS = "O(S)"
+
+
+@dataclass(frozen=True)
+class CascadeEntry:
+    """One kernel family: declared cascade + expected analysis results."""
+
+    name: str
+    build: Callable[[], Cascade]
+    expected_passes: int
+    footprint: str                    # O1 / OS in sequence length
+    bucket: str                       # taxonomy bucket (paper Table I)
+    kernels: Tuple[str, ...] = ()     # implementation sites (docs only)
+    lint: Tuple[str, ...] = field(default_factory=tuple)
+    rank: str = "M"                   # analysis rank (sequence)
+    peers: Tuple[str, ...] = ()       # prior work in the same bucket
+
+
+REGISTRY: Tuple[CascadeEntry, ...] = (
+    CascadeEntry(
+        name="reference-3pass",
+        build=reference_cascade,
+        expected_passes=3,
+        footprint=OS,
+        bucket="3-pass",
+        kernels=("kernels/ref.py::mha_reference",
+                 "kernels/ref.py::decode_reference"),
+        lint=("jnp:mha_reference", "jnp:decode_reference"),
+        peers=("PyTorch", "TensorFlow", "FLAT", "E.T."),
+    ),
+    CascadeEntry(
+        name="fusemax-2pass",
+        build=_cascade_2pass,
+        expected_passes=2,
+        footprint=OS,
+        bucket="2-pass",
+        kernels=("core/cascades_numeric.py::attention_2pass",),
+        lint=("jnp:attention_2pass",),
+        peers=("TileFlow", "Choi et al."),
+    ),
+    CascadeEntry(
+        name="fusemax-prefill-1pass",
+        build=prefill_cascade,
+        expected_passes=1,
+        footprint=O1,
+        bucket="1-pass",
+        kernels=("kernels/fusemax.py::fusemax_attention_pallas",
+                 "kernels/ops.py::_make_flash_jnp"),
+        lint=("pallas:prefill", "jnp:flash"),
+        peers=("FlashAttention-2", "FuseMax"),
+    ),
+    CascadeEntry(
+        name="decode-splitk-1pass",
+        build=decode_splitk_cascade,
+        expected_passes=1,
+        footprint=O1,
+        bucket="1-pass",
+        kernels=("kernels/decode.py::fusemax_decode_pallas",
+                 "kernels/ops.py::_decode_splitk_jnp"),
+        lint=("pallas:decode", "jnp:decode_splitk"),
+    ),
+    CascadeEntry(
+        name="decode-paged-splitk-1pass",
+        build=decode_paged_cascade,
+        expected_passes=1,
+        footprint=O1,
+        bucket="1-pass",
+        kernels=("kernels/decode.py::fusemax_decode_paged_pallas",),
+        lint=("pallas:decode_paged", "pallas:decode_paged_quantized"),
+    ),
+    CascadeEntry(
+        name="mla-decode-paged-1pass",
+        build=mla_decode_paged_cascade,
+        expected_passes=1,
+        footprint=O1,
+        bucket="1-pass",
+        kernels=("kernels/decode.py::fusemax_mla_decode_paged_pallas",
+                 "kernels/ops.py::mla_decode_partials"),
+        lint=("pallas:mla_decode_paged", "jnp:mla_decode"),
+    ),
+    CascadeEntry(
+        name="verify-chain-1pass",
+        build=verify_chain_cascade,
+        expected_passes=1,
+        footprint=O1,
+        bucket="1-pass",
+        kernels=("kernels/decode.py::fusemax_decode_*_pallas[p>1]",
+                 "kernels/ops.py::_verify_splitk_jnp"),
+        lint=("pallas:verify_paged", "jnp:verify_splitk"),
+    ),
+    CascadeEntry(
+        name="mla-verify-chain-1pass",
+        build=mla_verify_chain_cascade,
+        expected_passes=1,
+        footprint=O1,
+        bucket="1-pass",
+        kernels=("kernels/decode.py::fusemax_mla_decode_paged_pallas[p>1]",
+                 "kernels/ops.py::mla_verify_partials"),
+        lint=("pallas:mla_verify_paged", "jnp:mla_verify"),
+    ),
+)
+
+
+def registry() -> Tuple[CascadeEntry, ...]:
+    return REGISTRY
+
+
+def entry(name: str) -> CascadeEntry:
+    for e in REGISTRY:
+        if e.name == name:
+            return e
+    raise KeyError(name)
+
+
+def op_cascade(op_name: str) -> Cascade:
+    """Declared cascade for a public kernel op (dispatch registry)."""
+    return KERNEL_CASCADES[op_name]()
+
+
+__all__ = [
+    "O1",
+    "OS",
+    "CascadeEntry",
+    "KERNEL_CASCADES",
+    "REGISTRY",
+    "entry",
+    "op_cascade",
+    "registry",
+]
+
+# keep the numeric 2-pass binding importable next to its symbolic row
+attention_2pass_numeric = _attention_2pass

@@ -1,12 +1,17 @@
-"""Generate EXPERIMENTS.md sections from dry-run / roofline JSON records.
+"""Generate EXPERIMENTS.md sections from dry-run / roofline JSON records,
+plus the Einsum-cascade taxonomy, and gate CI on the cascade analyzer.
 
-  python -m repro.analysis.report            # prints §Dry-run + §Roofline
+  python -m repro.analysis.report            # §Dry-run + §Roofline + §Cascades
+  python -m repro.analysis.report --check    # analyzer + structural lint gate
+                                             # (non-zero exit on any mismatch)
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+import sys
 
 ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..")
 DRYRUN = os.path.join(ROOT, "out", "dryrun")
@@ -107,11 +112,69 @@ def summarize() -> dict:
     return out
 
 
-def main():
+def check(entries=None, *, structural: bool = True, out=sys.stdout) -> int:
+    """Run the cascade analyzer (+ structural lint) as a CI gate.
+
+    Returns the number of failures (0 == gate passes).  ``entries``
+    overrides the registry for tests; set ``REPRO_ANALYSIS_INJECT_BAD=1``
+    to append a deliberately mis-declared cascade (self-test hook — the
+    gate must go red when asked to).
+    """
+    from repro.analysis import passes as _passes
+    from repro.analysis.cascade import O1, REGISTRY, CascadeEntry
+    from repro.core.taxonomy import attention_3pass
+
+    entries = list(REGISTRY if entries is None else entries)
+    if os.environ.get("REPRO_ANALYSIS_INJECT_BAD"):
+        entries.append(CascadeEntry(
+            name="injected-bad-1pass-claim",
+            build=attention_3pass,
+            expected_passes=1,
+            footprint=O1,
+            bucket="1-pass",
+        ))
+
+    failures = 0
+    for r in _passes.full_report(entries):
+        if r["ok"]:
+            print(f"  ok  {r['name']}: {r['passes']}-pass, "
+                  f"{r['footprint']} live footprint", file=out)
+        else:
+            failures += 1
+            for p in r["problems"]:
+                print(f"FAIL  {r['name']}: {p}", file=out)
+
+    if structural:
+        from repro.analysis.lint import lint_all
+        for r in lint_all(entries):
+            if r["ok"]:
+                for pr in r["probes"]:
+                    print(f"  ok  {r['name']}: {pr['probe']}", file=out)
+            else:
+                failures += 1
+                print(f"FAIL  {r['name']}: {r['error']}", file=out)
+
+    print(f"cascade check: {failures} failure(s) across "
+          f"{len(entries)} declared cascades", file=out)
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="repro.analysis.report")
+    ap.add_argument(
+        "--check", action="store_true",
+        help="run the cascade analyzer + structural lint as a gate "
+             "(exit non-zero on any declaration/implementation mismatch)")
+    args = ap.parse_args(argv)
+    if args.check:
+        sys.exit(1 if check() else 0)
     print("## §Dry-run (all cells × both meshes)\n")
     print(dryrun_table())
     print("\n## §Roofline (single-pod, depth-extrapolated unrolled HLO)\n")
     print(roofline_table())
+    from repro.analysis.passes import taxonomy_table
+    print("\n## §Einsum-cascade analysis (declared cascades, proved bounds)\n")
+    print(taxonomy_table())
 
 
 if __name__ == "__main__":

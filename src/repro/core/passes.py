@@ -174,10 +174,17 @@ def analyze(cascade: Cascade, rank: str) -> PassAnalysis:
         for t in e.inputs:
             iterative_ref = any(r.iterative for r in t.ranks)
             final_ref = any(r.final for r in t.ranks)
+            filtered_ref = any(r.filtered and r.name in sub for r in t.ranks)
             u = info.get(t.name, _Info(0, 0))
 
             if final_ref:
                 wait = max(wait, u.ready)
+                continue
+            if filtered_ref:
+                # §II-C3: a filtered expression touches a *subset* of each
+                # R fiber — it streams alongside the consumer and never
+                # acts as a full-fiber barrier (no traversal, no reduce).
+                wait = max(wait, u.avail)
                 continue
             if iterative_ref:
                 # Prefix dependency; a *leaf* streamed through the iteration

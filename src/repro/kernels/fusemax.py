@@ -38,7 +38,23 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.einsum import Cascade
+from repro.core.taxonomy import attention_1pass
+
 NEG_INF = -1e30
+
+
+def prefill_cascade() -> Cascade:
+    """Declared cascade of this kernel family (checked by the analyzer).
+
+    The kernel below is Mapping 1 of Cascade 5: M1 is the sequential grid
+    dimension (the cascade's iterative rank), the RM/RD/RNV scratch
+    accumulators are the running state of Eqs. 39-41, and each K/V tile is
+    visited exactly once — the structural lint
+    (:mod:`repro.analysis.lint`) verifies all three properties against the
+    actual ``pallas_call`` geometry.
+    """
+    return attention_1pass()
 LANES = 128          # TPU lane width: scratch kept (block_q, LANES)
 LOG2E = 1.4426950408889634
 

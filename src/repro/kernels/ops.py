@@ -27,10 +27,31 @@ import jax.numpy as jnp
 
 from repro.kernels import autotune, ref as _ref
 from repro.kernels.decode import (
+    decode_paged_cascade, decode_splitk_cascade,
     fusemax_decode_paged_pallas, fusemax_decode_pallas,
-    fusemax_mla_decode_paged_pallas,
+    fusemax_mla_decode_paged_pallas, mla_decode_paged_cascade,
+    mla_verify_chain_cascade, verify_chain_cascade,
 )
-from repro.kernels.fusemax import NEG_INF, fusemax_attention_pallas
+from repro.kernels.fusemax import (
+    NEG_INF, fusemax_attention_pallas, prefill_cascade,
+)
+
+# Every public attention op dispatches to exactly one declared cascade
+# (co-located with its kernel family).  repro.analysis.report --check
+# verifies the declarations symbolically (pass counts, footprints) and
+# repro.analysis.lint structurally (grid sweeps, accumulator shapes) —
+# new kernels must register here before they can land (ROADMAP rule).
+KERNEL_CASCADES = {
+    "mha_reference": _ref.reference_cascade,
+    "decode_reference": _ref.reference_cascade,
+    "fusemax_attention": prefill_cascade,
+    "fusemax_decode": decode_splitk_cascade,
+    "fusemax_decode_paged": decode_paged_cascade,
+    "fusemax_mla_decode_paged": mla_decode_paged_cascade,
+    "fusemax_decode[p>1]": verify_chain_cascade,
+    "fusemax_decode_paged[p>1]": verify_chain_cascade,
+    "fusemax_mla_decode_paged[p>1]": mla_verify_chain_cascade,
+}
 
 
 def _round_up(x: int, m: int) -> int:

@@ -84,7 +84,9 @@ dense/paged/paged+prefix equality extends to a four-way check).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import logging
 import time
 from typing import Any, Callable, Iterable, Optional, Union
 
@@ -130,6 +132,42 @@ def enable_compilation_cache(path: Optional[str] = None) -> Optional[str]:
     except Exception:
         return None
     return path
+
+
+@contextlib.contextmanager
+def assert_no_recompiles():
+    """Assert that no jit tracing or XLA compilation happens inside the
+    block — the warmup guarantee: a warmed engine must serve resent
+    traffic entirely from already-built executables (zero retraces, zero
+    compiles).  Listens to jax's compile logging (``jax.log_compiles``);
+    a warm executable-cache hit emits nothing, while any retrace logs a
+    "Finished tracing" / "Compiling" record.  Yields the (live) list of
+    offending records and raises AssertionError at exit if it is
+    non-empty."""
+    records: list[str] = []
+
+    class _Capture(logging.Handler):
+        def emit(self, rec):
+            msg = rec.getMessage()
+            if "Finished tracing" in msg or "Compiling " in msg:
+                records.append(msg)
+
+    handler = _Capture(level=logging.DEBUG)
+    logger = logging.getLogger("jax")
+    old_level = logger.level
+    with jax.log_compiles():
+        logger.addHandler(handler)
+        if logger.level > logging.DEBUG:
+            logger.setLevel(logging.DEBUG)
+        try:
+            yield records
+        finally:
+            logger.removeHandler(handler)
+            logger.setLevel(old_level)
+    if records:
+        raise AssertionError(
+            f"{len(records)} jit retrace/compile(s) inside a "
+            f"no-recompile region:\n  " + "\n  ".join(records))
 
 
 def make_serve_step(cfg: ModelConfig, rt: Runtime = Runtime()):

@@ -917,6 +917,106 @@ class PagedKVCache:
                 jnp.asarray(dst, jnp.int32))
         return caches
 
+    # -- invariants ---------------------------------------------------------
+
+    def check_invariants(self) -> None:
+        """Full-state consistency audit; raises AssertionError on the
+        first violation.  Intended for tests (called at quiescent points —
+        admission batches with deferred COW pairs in flight hold transient
+        source references that intentionally fail the exact-refcount
+        check):
+
+        * free list: in range, duplicate-free, disjoint from the
+          refcounted set, and together they account for every page;
+        * refcounts: every page's count equals exactly its multiplicity
+          across slot ``owned`` rows + staged draft ``scratch`` rows +
+          (full class) one reference per resident prefix-index entry;
+        * block tables: row ``[: live]`` mirrors ``owned + scratch`` in
+          order, no live row holds the sentinel, every row past the live
+          extent *is* the sentinel;
+        * prefix index: entries point at in-range pages, parent chains
+          are closed under the index (no orphaned descendants), resident
+          entries carry no host blob and demoted entries carry one;
+        * host tier: ``_host_bytes`` equals demoted pages × page bytes;
+        * quantized pools: every data leaf's parallel ``*_scale`` leaf
+          covers the identical page set (same page-axis extent).
+        """
+        for key, c in self.classes.items():
+            pool = c.pool
+            free = pool._free
+            assert len(set(free)) == len(free), \
+                f"class '{key}': duplicate pages in the free list"
+            assert all(0 <= p < pool.num_pages for p in free), \
+                f"class '{key}': free-list page out of range"
+            refed = set(pool._refcount)
+            assert not (set(free) & refed), \
+                f"class '{key}': page both free and allocated"
+            assert len(free) + len(refed) == pool.num_pages, \
+                f"class '{key}': {pool.num_pages - len(free) - len(refed)}" \
+                f" page(s) leaked (neither free nor allocated)"
+            assert all(rc > 0 for rc in pool._refcount.values()), \
+                f"class '{key}': allocated page with refcount <= 0"
+
+            expected: Dict[int, int] = {}
+            for rows in (c.owned, c.scratch):
+                for row in rows:
+                    for p in row:
+                        expected[p] = expected.get(p, 0) + 1
+            if key == "full":
+                for e in self._prefix.values():
+                    if e.page >= 0:
+                        expected[e.page] = expected.get(e.page, 0) + 1
+            assert expected == pool._refcount, \
+                f"class '{key}': refcounts {pool._refcount} != expected " \
+                f"{expected} from slot rows + prefix index"
+
+            sent = self._sentinel(c)
+            for slot in range(self.slots):
+                live = c.owned[slot] + c.scratch[slot]
+                row = c.table[slot]
+                assert all(p < sent for p in live), \
+                    f"class '{key}' slot {slot}: live row holds sentinel"
+                assert list(row[:len(live)]) == live, \
+                    f"class '{key}' slot {slot}: table row " \
+                    f"{list(row[:len(live)])} != owned+scratch {live}"
+                assert all(int(p) == sent for p in row[len(live):]), \
+                    f"class '{key}' slot {slot}: unbacked row not sentinel"
+
+        full = self.classes.get("full")
+        demoted = 0
+        for h, e in self._prefix.items():
+            assert e.page < full.pool.num_pages, \
+                f"prefix entry {h}: page {e.page} out of range"
+            assert e.parent is None or e.parent in self._prefix, \
+                f"prefix entry {h}: orphaned (parent evicted from index)"
+            if e.page >= 0:
+                assert e.host is None, \
+                    f"prefix entry {h}: resident but still holds host blob"
+            else:
+                demoted += 1
+                assert e.host is not None, \
+                    f"prefix entry {h}: demoted without host blob"
+        host_bytes = 0 if full is None else demoted * full.bytes_per_page
+        assert self._host_bytes == host_bytes, \
+            f"host tier accounts {self._host_bytes} bytes, " \
+            f"{demoted} demoted page(s) imply {host_bytes}"
+
+        if self.kv_dtype is not None:
+            for (pattern, reps), cache_run in zip(self.cfg.runs(),
+                                                  self.caches):
+                for spec, c1 in zip(pattern, cache_run):
+                    if "attn" not in c1:
+                        continue
+                    axis = 1 if reps > 1 else 0
+                    for name, a in c1["attn"].items():
+                        scale = c1["attn"].get(f"{name}_scale")
+                        if name.endswith("_scale") or scale is None:
+                            continue
+                        assert scale.shape[axis] == a.shape[axis], \
+                            f"'{name}': scale pool covers " \
+                            f"{scale.shape[axis]} pages, data pool " \
+                            f"{a.shape[axis]}"
+
     # -- accounting ---------------------------------------------------------
 
     def _live_pages(self, c: _CacheClass) -> int:

@@ -51,6 +51,7 @@ def test_paged_kv_cache_grow_release():
     assert kv.pages_in_use["full"] == 6
     assert not kv.grow(0, 40)             # would need a 3rd page → refused
     assert kv.pages_in_use["full"] == 6   # all-or-nothing: unchanged
+    kv.check_invariants()
     tbl = kv.tables()["full"]
     assert tbl.shape == (2, 4)
     # slot 0's two pages and slot 1's four are disjoint
@@ -59,6 +60,7 @@ def test_paged_kv_cache_grow_release():
     kv.release(1)
     assert kv.pages_in_use["full"] == 2
     assert kv.grow(0, 40)                 # freed pages reusable
+    kv.check_invariants()
     # a pool smaller than one worst-case request is rejected up front —
     # the preempt-youngest progress guarantee needs a lone request to fit
     tiny = PagedKVCache(cfg, slots=2, max_len=64, dtype=jnp.float32,
@@ -106,10 +108,12 @@ def test_paged_matches_dense_greedy_mixed_lengths():
     assert m["resident_cache_bytes"] == 0          # no live slots remain
     assert 0 < m["peak_resident_cache_bytes"] < \
         de.memory_stats()["physical_cache_bytes"]
+    pe.kv.check_invariants()
     # completed requests' full pages are retained as reusable prefix
     # cache; dropping the index drains the pool to fully free
     pe.clear_prefix_cache()
     assert all(v == 0 for v in pe.kv.pages_in_use.values())
+    pe.kv.check_invariants()
 
 
 def test_preemption_on_pool_exhaustion_matches_dense():
@@ -128,8 +132,10 @@ def test_preemption_on_pool_exhaustion_matches_dense():
     assert pe.stats["preemptions"] > 0
     assert any(r > 0 for r in
                pe.memory_stats()["peak_pages_in_use"].values())
+    pe.kv.check_invariants()
     pe.clear_prefix_cache()
     assert all(v == 0 for v in pe.kv.pages_in_use.values())
+    pe.kv.check_invariants()
 
 
 def test_paged_ring_eviction_matches_dense_rotation():

@@ -128,6 +128,7 @@ def test_quant_greedy_quality_gqa(kv_dtype):
     quant, qe = _serve(cfg, params, prompts, "paged", new_tokens=6,
                        kv_dtype=kv_dtype)
     assert qe.kv.kv_dtype == kv_dtype
+    qe.kv.check_invariants()    # incl. scale-pool/data-pool page parity
     rate = _match_rate(exact, quant)
     assert rate >= 0.9, (rate, exact, quant)
 
@@ -240,9 +241,11 @@ def test_demote_promote_hit_greedy_equivalence():
     demoted = [e for e in eng.kv._prefix.values() if e.page < 0]
     assert demoted and all(e.host is not None for e in demoted)
 
+    eng.kv.check_invariants()   # demoted entries hold blobs, bytes match
     a2 = _run_one(eng, 2, pa)
     st = eng.kv.stats
     assert st["promotions"] >= 3, st
+    eng.kv.check_invariants()
     assert eng.stats["prefix_hits"] >= 1
     # 24-token resend over a 3-full-page hit: the exact-cover COW
     # re-prefills the final token, so 23 of 24 prompt tokens are reused
@@ -300,6 +303,7 @@ def test_swap_host_tier_drains():
     assert ht["demoted_pages"] == 0 and ht["demoted_bytes"] == 0
     assert eng.kv._host_bytes == 0
     assert all(v == 0 for v in eng.kv.pages_in_use.values())
+    eng.kv.check_invariants()
 
     # warmup ends with clear_prefix: no demoted residue either
     eng.warmup([24, 40])

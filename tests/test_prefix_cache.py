@@ -53,6 +53,7 @@ def test_shared_prefix_matches_cold_prefill():
     warm, pe = _serve(cfg, params, prompts, "paged", page_size=16,
                       prefix_caching=True)
     assert dense == cold == warm
+    pe.kv.check_invariants()
     # first request is the cold writer; every later one maps the 2 shared
     # pages (admission-time registration shares across live slots too)
     assert pe.stats["prefix_hits"] == len(prompts) - 1
@@ -181,10 +182,12 @@ def test_pool_drains_to_full_on_idle():
     assert m["resident_cache_bytes"] == 0
     assert m["prefix_cache"]["entries"] == pool.pages_in_use > 0
     assert all(pool.refcount(e.page) == 1 for e in kv._prefix.values())
+    kv.check_invariants()
     dropped = eng.clear_prefix_cache()
     assert dropped == m["prefix_cache"]["entries"]
     assert pool.pages_in_use == 0 and pool.free_pages == pool.num_pages
     assert len(kv._prefix) == 0
+    kv.check_invariants()
 
 
 def test_admit_never_evicts_its_own_match():
@@ -216,6 +219,7 @@ def test_admit_never_evicts_its_own_match():
     assert len(kv._prefix) == entries_before
     assert pool.free_pages == free_before
     assert kv.classes["full"].owned[0] == []
+    kv.check_invariants()
 
 
 def test_prefix_eviction_under_pool_pressure():
@@ -231,6 +235,7 @@ def test_prefix_eviction_under_pool_pressure():
                        page_size=8, num_pages=8, prefix_caching=True)
     assert dense == paged
     assert pe.kv.stats["prefix_evictions"] > 0
+    pe.kv.check_invariants()
     pe.clear_prefix_cache()
     assert all(v == 0 for v in pe.kv.pages_in_use.values())
 

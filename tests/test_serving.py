@@ -2,11 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.model import transformer as tf
 from repro.model.layers import Runtime
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import Request, ServeEngine, assert_no_recompiles
 
 RT = Runtime(activation_dtype=jnp.float32, param_dtype=jnp.float32)
 
@@ -163,6 +164,40 @@ def test_prefill_jit_keys_are_length_bucketed():
     engine.submit(req)
     engine.run()
     assert req.generated == toks
+
+
+def test_warmed_engine_serves_without_recompiles():
+    """The warmup guarantee (paged + prefix engine): after ``warmup`` has
+    compiled every jit key the workload's length buckets can produce,
+    real traffic of those lengths — cold prompts AND an identical resend
+    through the prefix-hit path — triggers zero jit retraces.  A length
+    from an *unwarmed* bucket must trip the detector (it is not
+    vacuous)."""
+    cfg = get_config("stablelm-1.6b-smoke")
+    params, _ = tf.init(cfg, jax.random.PRNGKey(0), RT)
+    engine = ServeEngine(cfg, params, slots=2, max_len=64, rt=RT,
+                         decode_chunk=4, cache_layout="paged",
+                         page_size=16, prefix_caching=True)
+    engine.warmup([5, 9])
+    rng = np.random.default_rng(6)
+
+    def serve(prompts):
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            engine.submit(r)
+        engine.run()
+        assert all(r.done for r in reqs)
+
+    p5 = rng.integers(0, cfg.vocab, 5).astype(np.int32)
+    p9 = rng.integers(0, cfg.vocab, 9).astype(np.int32)
+    with assert_no_recompiles():
+        serve([p5, p9])        # cold prompts, warmed buckets
+        serve([p5, p9])        # identical resend → prefix-hit offsets
+    # negative control: bucket 32 was never warmed → must be detected
+    with pytest.raises(AssertionError, match="retrace"):
+        with assert_no_recompiles():
+            serve([rng.integers(0, cfg.vocab, 20).astype(np.int32)])
 
 
 def test_chunked_prefill_matches_whole_prompt():
