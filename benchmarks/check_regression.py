@@ -17,6 +17,16 @@ each have a ``min_*`` floor — acceptance quietly collapsing (a proposer
 or accept-rule regression) would otherwise read as runner jitter.  The
 acceptance floors are deterministic counters, so they sit close to the
 measured values; the speedup-ratio floor is wall-clock and sits wide.
+A baseline ``latency`` block gates the async-serving smoke's tails:
+``max_ttft_p95_s`` / ``max_itl_p95_s`` ceilings on the async engine's
+open-loop percentiles, a ``min_itl_p95_sync_ratio`` floor on the
+sync-vs-async ITL p95 ratio (the chunked-prefill interleave win — the
+one number that collapses if admission prefill ever again runs
+whole-prompt in front of in-flight decode streams), and a
+``min_dp_tokens_reused`` floor on the dp-routed leg (prefix-affinity
+routing must concentrate, not dilute, the prefix cache).  Ratios of
+same-run wall clocks are runner-speed-invariant, so the ratio floor
+sits near the criterion (3.0) while the absolute ceilings sit wide.
 A ``min_promote_hit_rate`` floor gates the host swap tier (demoted
 prefix chains must actually promote back on hits — a broken promote
 path would silently degrade to recompute), and a
@@ -134,6 +144,51 @@ def check(metrics: dict, baseline_all: dict, key: str,
                 f"quantized-cache regression: {lo} bytes_per_live_token "
                 f"{got} > {ceil} ceiling (scale-pool bloat or a dtype "
                 f"fallback to full width)")
+    lat_base = base.get("latency")
+    if lat_base:
+        a = metrics.get("async")
+        if a is None:
+            failures.append("baseline gates latency tails but the bench "
+                            "run has no 'async' block (was the async "
+                            "smoke invocation changed?)")
+        else:
+            for stat, field in (("ttft_s", "max_ttft_p95_s"),
+                                ("itl_s", "max_itl_p95_s")):
+                ceil = lat_base.get(field)
+                if ceil is None:
+                    continue
+                got = float(a[stat]["p95"])
+                print(f"[{key}] async {stat} p95 {got} "
+                      f"(gate: <= {ceil})")
+                if got > float(ceil):
+                    failures.append(
+                        f"latency-tail regression: async {stat} p95 "
+                        f"{got} > {ceil} ceiling")
+        floor = lat_base.get("min_itl_p95_sync_ratio")
+        if floor is not None:
+            got = metrics.get("itl_p95_sync_over_async")
+            print(f"[{key}] sync/async ITL p95 ratio {got} "
+                  f"(gate: >= {floor})")
+            if got is None or float(got) < float(floor):
+                failures.append(
+                    f"interleave regression: sync/async ITL p95 ratio "
+                    f"{got} < {floor} floor (chunked prefill is no "
+                    f"longer shielding in-flight streams from "
+                    f"admission stalls)")
+        floor = lat_base.get("min_dp_tokens_reused")
+        if floor is not None:
+            got = int(metrics.get("dp", {}).get("tokens_reused", 0))
+            print(f"[{key}] dp routed tokens_reused {got} "
+                  f"(gate: >= {floor})")
+            if got < int(floor):
+                failures.append(
+                    f"dp-routing regression: routed tokens_reused {got} "
+                    f"< {floor} floor (prefix-affinity routing is "
+                    f"diluting the cache across replicas)")
+        if metrics.get("outputs_match") is False:
+            failures.append(
+                "async greedy streams diverged from the sync engine "
+                "(outputs_match is False)")
     spec_base = base.get("speculation")
     if spec_base:
         sp = metrics.get("speculation")
@@ -163,7 +218,8 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default="BENCH_baseline.json")
     ap.add_argument("--key", default="serving_smoke",
                     help="baseline entry to gate against (serving_smoke "
-                         "| prefix_smoke | spec_smoke | swap_smoke)")
+                         "| prefix_smoke | spec_smoke | swap_smoke | "
+                         "async_smoke)")
     ap.add_argument("--leg", default="",
                     help="CI matrix leg (oldest | newest); a baseline "
                          "entry '<key>@<leg>' overrides the shared one")

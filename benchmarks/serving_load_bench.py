@@ -1,0 +1,157 @@
+"""Open-loop serving load bench: offered load vs tail latency.
+
+Thin driver over ``repro.launch.serve --async`` (the launcher IS the
+benchmark: seeded Poisson arrivals, per-token timestamps, chunked
+prefill interleaved with fused decode, sync-engine bit-equality).  Two
+modes:
+
+Sweep — ``--arrival-rate`` takes a comma list and every other flag
+passes through to the launcher; each point serves the *same* seeded
+trace at a different offered load and the script prints a
+load-vs-tail-latency table (tok/s, TTFT p50/p95, ITL p50/p95/p99, and
+the sync-open-loop ITL p95 ratio at each point)::
+
+  PYTHONPATH=src python benchmarks/serving_load_bench.py \
+      --arch stablelm-1.6b-smoke --requests 12 --slots 4 \
+      --max-len 2304 --prompt-len 16 --long-prompt-len 2048 \
+      --long-every 2 --new-tokens 16 --long-new-tokens 2 \
+      --decode-chunk 1 --prefill-quantum 64 --cache-layout paged \
+      --arrival-rate 2,8,16
+
+Smoke (``--smoke``, the CI job) — two frozen load points:
+
+* **interleave** (16 req/s, 2048-token long prompts every 2nd request
+  between 16-token chats): the chunked-prefill stress case.  A sync
+  engine's whole-prompt admission stalls every in-flight stream for
+  hundreds of ms (the stall lands in ITL p95); the async engine slices
+  the same prompt into 64-token quanta between decode steps, so the
+  regression gate asserts ``itl_p95_sync_over_async >= 3``.
+* **dp** (4 req/s intake / 2 req/s routed, 512-token shared prefix,
+  dp=2 replicas): prefix-affinity routing must concentrate the shared
+  prefix on its holder replica — ``dp.tokens_reused`` is gated against
+  the single-replica prefix_smoke floor (448), i.e. routing multiplies
+  the PR-4 hit rate instead of diluting it 1/dp.
+
+Both points assert greedy streams byte-identical to the synchronous
+engine on the same arrival trace; the merged metrics land in
+``BENCH_serving_async.json`` with the gate fields
+(``tok_per_s``/``async``/``itl_p95_sync_over_async``/``dp``/
+``outputs_match``) top-level for ``benchmarks/check_regression.py
+--key async_smoke``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SMOKE_INTERLEAVE = [
+    "--arch", "stablelm-1.6b-smoke", "--async", "--requests", "12",
+    "--slots", "4", "--max-len", "2304", "--prompt-len", "16",
+    "--long-prompt-len", "2048", "--long-every", "2",
+    "--new-tokens", "16", "--long-new-tokens", "2",
+    "--decode-chunk", "1", "--prefill-quantum", "64",
+    "--cache-layout", "paged", "--page-size", "16",
+    "--arrival-rate", "16", "--seed", "0",
+]
+SMOKE_DP = [
+    "--arch", "stablelm-1.6b-smoke", "--async", "--requests", "12",
+    "--slots", "4", "--max-len", "640", "--prompt-len", "544",
+    "--shared-prefix-len", "512", "--new-tokens", "16",
+    "--decode-chunk", "1", "--prefill-quantum", "64",
+    "--cache-layout", "paged", "--page-size", "16",
+    "--arrival-rate", "4", "--dp", "2", "--dp-arrival-rate", "2",
+    "--seed", "0",
+]
+
+
+def _run_point(serve_mod, argv):
+    """One launcher invocation with its own json write suppressed."""
+    return serve_mod.main(list(argv) + ["--json", ""])
+
+
+def smoke(serve_mod, out_path: str) -> dict:
+    inter = _run_point(serve_mod, SMOKE_INTERLEAVE)
+    dp = _run_point(serve_mod, SMOKE_DP)
+    merged = {
+        "mode": "async_smoke",
+        "arch": inter["arch"],
+        # gate fields (top-level, read by check_regression):
+        "tok_per_s": inter["tok_per_s"],
+        "ttft_s": inter["ttft_s"],
+        "async": inter["async"],
+        "sync_open_loop": inter["sync_open_loop"],
+        "itl_p95_sync_over_async": inter["itl_p95_sync_over_async"],
+        "dp": dp["dp"],
+        "outputs_match": bool(inter["outputs_match"]
+                              and dp["outputs_match"]),
+        # full per-point metrics for the artifact:
+        "points": {"interleave": inter, "dp": dp},
+    }
+    print(f"smoke: interleave ratio "
+          f"{merged['itl_p95_sync_over_async']} (gate >= 3), dp "
+          f"tokens_reused {merged['dp']['tokens_reused']} "
+          f"(gate >= 448), outputs_match {merged['outputs_match']}")
+    if out_path:
+        with open(out_path, "w") as fh:
+            json.dump(merged, fh, indent=1)
+        print(f"wrote {out_path}")
+    return merged
+
+
+def sweep(serve_mod, rates, passthrough, out_path: str) -> dict:
+    points = []
+    for r in rates:
+        m = _run_point(serve_mod, ["--async"] + passthrough
+                       + ["--arrival-rate", str(r)])
+        points.append(m)
+    hdr = (f"{'rate':>7} {'tok/s':>7} {'ttft_p50':>9} {'ttft_p95':>9} "
+           f"{'itl_p50':>8} {'itl_p95':>8} {'itl_p99':>8} "
+           f"{'sync/async':>10} {'match':>6}")
+    print("\nload vs tail latency (open loop, same seeded trace):")
+    print(hdr)
+    for m in points:
+        a = m["async"]
+        print(f"{m['arrival_rate']:>7.2f} {a['tok_per_s']:>7.1f} "
+              f"{a['ttft_s']['p50']:>9.4f} {a['ttft_s']['p95']:>9.4f} "
+              f"{a['itl_s']['p50']:>8.4f} {a['itl_s']['p95']:>8.4f} "
+              f"{a['itl_s']['p99']:>8.4f} "
+              f"{str(m['itl_p95_sync_over_async']):>10} "
+              f"{str(m['outputs_match']):>6}")
+    out = {"mode": "async_load_sweep",
+           "rates": [float(r) for r in rates], "points": points}
+    if out_path:
+        with open(out_path, "w") as fh:
+            json.dump(out, fh, indent=1)
+        print(f"wrote {out_path}")
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        epilog="every unlisted flag passes through to "
+               "`python -m repro.launch.serve --async`")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the two frozen CI load points and write "
+                         "the merged gate metrics")
+    ap.add_argument("--arrival-rate", default="4",
+                    help="comma list of offered loads (req/s) to sweep")
+    ap.add_argument("--json", default="BENCH_serving_async.json",
+                    help="write merged metrics here ('' to disable)")
+    args, passthrough = ap.parse_known_args(argv)
+
+    from repro.launch import serve as serve_mod
+
+    if args.smoke:
+        m = smoke(serve_mod, args.json)
+        if not m["outputs_match"]:
+            raise SystemExit("async greedy streams diverged from the "
+                             "sync engine")
+        return m
+    rates = [float(r) for r in str(args.arrival_rate).split(",") if r]
+    return sweep(serve_mod, rates, passthrough, args.json)
+
+
+if __name__ == "__main__":
+    main()

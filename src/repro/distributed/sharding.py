@@ -333,3 +333,28 @@ def cache_shardings(cache_axes_tree, cache_tree, mesh: Mesh,
 
     return jax.tree.map(one, cache_axes_tree, cache_tree,
                         is_leaf=lambda t: isinstance(t, tuple) or t is None)
+
+
+def replica_device_groups(dp: int, tp: int = 1,
+                          devices: Optional[Sequence] = None) -> list:
+    """Partition ``devices`` (default: ``jax.devices()``) into ``dp``
+    contiguous groups of ``tp`` for data-parallel serving replicas —
+    replica i owns devices [i*tp, (i+1)*tp).  Contiguous slices keep each
+    replica's TP collectives on neighbouring chips (ICI-local on TPU
+    slices) while replicas never communicate — routing is host-side.
+
+    With fewer than ``dp*tp`` devices and ``tp == 1`` the groups wrap
+    round-robin (CPU smoke: every replica shares device 0 — correctness
+    and routing behaviour are unchanged, only true parallel speedup is
+    lost).  With ``tp > 1`` the device count must cover every group.
+    """
+    if dp < 1 or tp < 1:
+        raise ValueError(f"need dp >= 1 and tp >= 1, got dp={dp} tp={tp}")
+    devs = list(devices) if devices is not None else list(jax.devices())
+    need = dp * tp
+    if len(devs) < need:
+        if tp > 1:
+            raise ValueError(
+                f"dp={dp} tp={tp} needs {need} devices, have {len(devs)}")
+        return [[devs[i % len(devs)]] for i in range(dp)]
+    return [devs[i * tp:(i + 1) * tp] for i in range(dp)]

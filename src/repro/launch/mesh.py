@@ -45,3 +45,24 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests / elastic re-mesh."""
     return _build_mesh(shape, axes)
+
+
+def make_replica_meshes(dp: int, tp: int = 1):
+    """Per-replica meshes for data-parallel serving: ``dp`` engine
+    replicas, each tensor-parallel over its own ``tp`` contiguous devices
+    (see ``repro.distributed.sharding.replica_device_groups``).  Replicas
+    never communicate — the async router fans requests out host-side — so
+    there is no global dp axis; ``tp == 1`` returns ``[None] * dp``
+    (unsharded engines, the CPU smoke path)."""
+    if tp <= 1:
+        if dp < 1:
+            raise ValueError(f"need dp >= 1, got {dp}")
+        return [None] * dp
+    from repro.distributed.sharding import replica_device_groups
+
+    import numpy as np
+
+    groups = replica_device_groups(dp, tp)
+    return [jax.sharding.Mesh(np.asarray(g), ("model",),
+                              **_axis_type_kwargs(1))
+            for g in groups]

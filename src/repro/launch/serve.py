@@ -69,6 +69,10 @@ from repro.model.layers import Runtime
 from repro.serving.engine import (
     Request, ServeEngine, enable_compilation_cache,
 )
+from repro.serving.scheduler import (
+    AsyncRequest, AsyncServeEngine, DataParallelAsyncEngine, WallClock,
+    latency_metrics, poisson_arrivals, serve_open_loop,
+)
 
 
 def _trace_lens(args) -> list:
@@ -242,6 +246,201 @@ def _serve_one_layout(args, cfg, params, rt, layout: str,
                 max(1, stats["decode_dispatches"]), 3),
         }
     return out
+
+
+def _async_trace(args, cfg) -> tuple:
+    """The open-loop trace: (prompts, decode budgets).  The usual seeded
+    trace (shared prefix / mixed lengths supported), with every
+    ``--long-every``-th request replaced by a ``--long-prompt-len``
+    prompt with its own ``--long-new-tokens`` budget — the
+    chat-plus-batch mix where short interactive streams decode for a
+    long time while long-prompt jobs keep arriving, and a synchronous
+    engine's whole-prompt admission prefill stalls every in-flight
+    stream (the interleave stress case)."""
+    rng = np.random.default_rng(args.seed)
+    lens = _trace_lens(args)
+    budgets = [args.new_tokens] * len(lens)
+    long_len = getattr(args, "long_prompt_len", 0) or 0
+    if long_len:
+        k = max(2, getattr(args, "long_every", 3) or 3)
+        long_new = getattr(args, "long_new_tokens", None) \
+            or args.new_tokens
+        for i in range(len(lens)):
+            if i % k == k - 1:
+                lens[i] = long_len
+                budgets[i] = long_new
+    sp = args.shared_prefix_len
+    shared = rng.integers(0, cfg.vocab, size=(sp,)) if sp else None
+    prompts = []
+    for plen in lens:
+        tail = rng.integers(0, cfg.vocab, size=(plen - sp,)) if sp \
+            else rng.integers(0, cfg.vocab, size=(plen,))
+        prompts.append(
+            (np.concatenate([shared, tail]) if sp else tail)
+            .astype(np.int32))
+    return prompts, budgets
+
+
+def _fresh_requests(prompts, budgets, arrivals, t0) -> list:
+    return [AsyncRequest(rid=i, prompt=p.copy(), max_new_tokens=int(b),
+                         arrival=t0 + float(a))
+            for i, (p, b, a) in enumerate(zip(prompts, budgets,
+                                              arrivals))]
+
+
+def _async_engine(args, cfg, params, rt, *, layout, prefix_caching,
+                  clock=None, mesh=None) -> AsyncServeEngine:
+    return AsyncServeEngine(
+        cfg, params, slots=args.slots, max_len=args.max_len, rt=rt,
+        temperature=args.temperature, decode_chunk=args.decode_chunk,
+        prefill_chunk=args.prefill_chunk, cache_layout=layout,
+        page_size=args.page_size, num_pages=args.num_pages,
+        prefix_caching=prefix_caching,
+        prefill_quantum=getattr(args, "prefill_quantum", None),
+        clock=clock, mesh=mesh)
+
+
+def _leg_summary(engine, reqs) -> dict:
+    out = latency_metrics(reqs)
+    out["dispatches"] = {
+        "prefill": engine.stats["prefill_dispatches"],
+        "decode": engine.stats["decode_dispatches"],
+        "decode_steps": engine.stats["decode_steps"],
+    }
+    out["preemptions"] = engine.stats["preemptions"]
+    out["tokens_reused"] = engine.stats["tokens_reused"]
+    return out
+
+
+def serve_async_bench(args) -> dict:
+    """Open-loop async serving bench: the same seeded Poisson arrival
+    trace served through (a) the async engine on dense / paged /
+    paged+prefix — greedy streams asserted bit-identical to a
+    synchronous reference engine (``outputs_match``), (b) a *timed*
+    async vs sync-open-loop A/B on the paged+prefix layout for the
+    tail-latency comparison (``itl_p95_sync_over_async`` — the
+    interleaved-prefill win), and (c, ``--dp N``) N replicas behind the
+    prefix-affinity router for the routed cache-hit multiplier."""
+    if getattr(args, "speculate", None) and not getattr(
+            args, "no_speculate", False):
+        raise SystemExit("--speculate does not combine with --async yet "
+                         "(the fused verify dispatch conflicts with "
+                         "mid-prefill slots)")
+    cfg = get_config(args.arch)
+    rt = Runtime(activation_dtype=jnp.float32, param_dtype=jnp.float32)
+    params, _ = tf.init(cfg, jax.random.PRNGKey(args.seed), rt)
+    prompts, budgets = _async_trace(args, cfg)
+    lens = sorted({len(p) for p in prompts})
+    arr = poisson_arrivals(args.arrival_rate, len(prompts),
+                           seed=args.seed)
+
+    # -- bit-equality legs: async dense / paged / paged+prefix, plus the
+    # synchronous reference on the identical request set.  Scheduling
+    # changes when a token is computed, never what, so every greedy
+    # stream must be byte-for-byte the sync engine's.
+    outputs = {}
+    legs = {"dense": ("dense", False),
+            "paged_noprefix": ("paged", False),
+            "paged": ("paged", True)}
+    timed = {}
+    for name, (layout, prefix) in legs.items():
+        eng = _async_engine(args, cfg, params, rt, layout=layout,
+                            prefix_caching=prefix)
+        warm = None
+        if not args.no_warmup:
+            warm = round(eng.warmup(lens), 4)
+        reqs = _fresh_requests(prompts, budgets, arr, eng.clock.now())
+        eng.serve_trace(reqs)
+        outputs[name] = [list(r.generated) for r in reqs]
+        timed[name] = _leg_summary(eng, reqs)
+        timed[name]["warmup_s"] = warm
+        timed[name]["interleave"] = eng.interleave
+
+    sync_ref = ServeEngine(
+        cfg, params, slots=args.slots, max_len=args.max_len, rt=rt,
+        temperature=args.temperature, decode_chunk=args.decode_chunk,
+        prefill_chunk=args.prefill_chunk, cache_layout="paged",
+        page_size=args.page_size, num_pages=args.num_pages,
+        prefix_caching=True)
+    if not args.no_warmup:
+        sync_ref.warmup(lens)
+    sync_clock = WallClock()
+    sreqs = _fresh_requests(prompts, budgets, arr, sync_clock.now())
+    serve_open_loop(sync_ref, sreqs, clock=sync_clock)
+    outputs["sync"] = [list(r.generated) for r in sreqs]
+    outputs_match = all(outputs[n] == outputs["sync"] for n in legs)
+    sync_lat = latency_metrics(sreqs)
+
+    a = timed["paged"]
+    ratio = None
+    if a["itl_s"]["p95"] and sync_lat["itl_s"]["p95"]:
+        ratio = round(sync_lat["itl_s"]["p95"] / a["itl_s"]["p95"], 3)
+
+    metrics = {
+        "arch": args.arch,
+        "mode": "async_open_loop",
+        "requests": len(prompts),
+        "slots": args.slots,
+        "arrival_rate": args.arrival_rate,
+        "seed": args.seed,
+        "prompt_len": args.prompt_len,
+        "long_prompt_len": getattr(args, "long_prompt_len", 0) or 0,
+        "long_every": getattr(args, "long_every", 3) or 3,
+        "shared_prefix_len": args.shared_prefix_len,
+        "new_tokens": args.new_tokens,
+        "decode_chunk": args.decode_chunk,
+        "prefill_quantum": getattr(args, "prefill_quantum", None)
+            or (args.prefill_chunk or 32),
+        "page_size": args.page_size,
+        "outputs_match": outputs_match,
+        "async": a,
+        "async_legs": timed,
+        "sync_open_loop": sync_lat,
+        "itl_p95_sync_over_async": ratio,
+        # the generic regression gate reads these two top-level fields
+        "tok_per_s": a["tok_per_s"],
+        "ttft_s": a["ttft_s"],
+    }
+
+    dp = getattr(args, "dp", 1) or 1
+    if dp > 1:
+        from repro.launch.mesh import make_replica_meshes
+        tp = 1
+        mesh_arg = getattr(args, "mesh", None)
+        if mesh_arg:
+            m = _parse_mesh(mesh_arg)
+            tp = int(m.shape["model"]) if m is not None else 1
+        meshes = make_replica_meshes(dp, tp)
+        clock = WallClock()
+        engines = []
+        for i in range(dp):
+            e = _async_engine(args, cfg, params, rt, layout="paged",
+                              prefix_caching=True, clock=clock,
+                              mesh=meshes[i])
+            if not args.no_warmup:
+                e.warmup(lens)
+            engines.append(e)
+        dpe = DataParallelAsyncEngine(engines)
+        # arrival-time routing is the point: the prefix index evolves as
+        # earlier requests prefill, so a lower rate gives each arrival a
+        # registered prefix to match (the router is still exercised cold
+        # on the first request)
+        dp_rate = getattr(args, "dp_arrival_rate", None) \
+            or args.arrival_rate
+        dp_arr = poisson_arrivals(dp_rate, len(prompts), seed=args.seed)
+        dreqs = _fresh_requests(prompts, budgets, dp_arr, clock.now())
+        dpe.serve_trace(dreqs)
+        dp_out = [list(r.generated) for r in dreqs]
+        metrics["dp"] = dict(
+            dpe.stats_summary(),
+            tp=tp,
+            arrival_rate=dp_rate,
+            latency=latency_metrics(dreqs),
+            outputs_match=dp_out == outputs["sync"],
+        )
+        metrics["outputs_match"] = outputs_match and \
+            metrics["dp"]["outputs_match"]
+    return metrics
 
 
 def serve_bench(args) -> dict:
@@ -469,6 +668,41 @@ def main(argv=None) -> dict:
                          "'paged_sharded' layout (cross-checked via "
                          "outputs_match; per-device bytes under "
                          "memory.sharding)")
+    ap.add_argument("--async", dest="run_async", action="store_true",
+                    help="open-loop async serving bench: seeded Poisson "
+                         "arrivals at --arrival-rate, per-request token "
+                         "streams with per-token timestamps, chunked "
+                         "prefill interleaved with decode; reports tail "
+                         "TTFT/ITL and asserts greedy streams are "
+                         "bit-identical to the sync engine on the same "
+                         "trace (writes BENCH_serving_async.json unless "
+                         "--json overrides)")
+    ap.add_argument("--arrival-rate", type=float, default=4.0,
+                    help="offered load in requests/s for --async "
+                         "(open-loop Poisson, seeded by --seed)")
+    ap.add_argument("--prefill-quantum", type=int, default=None,
+                    help="tokens per interleaved prefill slice on the "
+                         "async engine (default: --prefill-chunk or 32); "
+                         "bounds how long one admission can stall "
+                         "in-flight streams' ITL")
+    ap.add_argument("--long-prompt-len", type=int, default=0,
+                    help="async trace mode: every --long-every-th "
+                         "request gets a prompt this long — the "
+                         "interleave stress case")
+    ap.add_argument("--long-every", type=int, default=3,
+                    help="period of long prompts in the async trace")
+    ap.add_argument("--long-new-tokens", type=int, default=None,
+                    help="decode budget for the long-prompt requests "
+                         "(default: --new-tokens); small values make "
+                         "them prefill-dominated batch jobs")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="async: serve a second leg through N "
+                         "data-parallel engine replicas behind the "
+                         "prefix-affinity router (tp per replica from "
+                         "--mesh)")
+    ap.add_argument("--dp-arrival-rate", type=float, default=None,
+                    help="offered load for the --dp leg (default: "
+                         "--arrival-rate)")
     ap.add_argument("--json", default="BENCH_serving.json",
                     help="write metrics here ('' to disable)")
     ap.add_argument("--no-compile-cache", action="store_true",
@@ -480,6 +714,30 @@ def main(argv=None) -> dict:
 
     if not args.no_compile_cache:
         enable_compilation_cache()
+    if args.run_async:
+        if args.json == "BENCH_serving.json":
+            args.json = "BENCH_serving_async.json"
+        metrics = serve_async_bench(args)
+        a, s = metrics["async"], metrics["sync_open_loop"]
+        print(f"async open-loop @ {metrics['arrival_rate']} req/s: "
+              f"{a['served']}/{a['requests']} served, "
+              f"{a['tok_per_s']:.1f} tok/s, TTFT p95 "
+              f"{a['ttft_s']['p95']}s, ITL p95 {a['itl_s']['p95']}s "
+              f"(sync open-loop ITL p95 {s['itl_s']['p95']}s → "
+              f"sync/async = {metrics['itl_p95_sync_over_async']})")
+        print(f"  greedy streams match sync engine: "
+              f"{metrics['outputs_match']}")
+        dp = metrics.get("dp")
+        if dp:
+            print(f"  dp={dp['dp']} routed: tokens_reused "
+                  f"{dp['tokens_reused']} (per replica "
+                  f"{[p['tokens_reused'] for p in dp['per_replica']]}), "
+                  f"routing {dp['routing']['prefix_routed']} by prefix / "
+                  f"{dp['routing']['load_routed']} by load")
+        if args.json:
+            with open(args.json, "w") as fh:
+                json.dump(metrics, fh, indent=1)
+        return metrics
     metrics = serve_bench(args)
     print(f"served {metrics['requests']} requests "
           f"({metrics['tokens_decoded']} new tokens) in "

@@ -3,6 +3,16 @@ from repro.serving.engine import (
     make_prefill_step, make_serve_step, sample_logits,
 )
 from repro.serving.kv_cache import PagePool, PagedKVCache
-__all__ = ["PagePool", "PagedKVCache", "Request", "ServeEngine",
-           "enable_compilation_cache", "make_decode_loop",
-           "make_prefill_step", "make_serve_step", "sample_logits"]
+from repro.serving.scheduler import (
+    AsyncRequest, AsyncScheduler, AsyncServeEngine,
+    DataParallelAsyncEngine, PrefixAffinityRouter, TokenStream,
+    VirtualClock, WallClock, interleave_supported, latency_metrics,
+    poisson_arrivals, serve_open_loop,
+)
+__all__ = ["AsyncRequest", "AsyncScheduler", "AsyncServeEngine",
+           "DataParallelAsyncEngine", "PagePool", "PagedKVCache",
+           "PrefixAffinityRouter", "Request", "ServeEngine", "TokenStream",
+           "VirtualClock", "WallClock", "enable_compilation_cache",
+           "interleave_supported", "latency_metrics", "make_decode_loop",
+           "make_prefill_step", "make_serve_step", "poisson_arrivals",
+           "sample_logits", "serve_open_loop"]

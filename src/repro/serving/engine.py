@@ -624,6 +624,7 @@ class ServeEngine:
         cold-first so a group that writes fresh prefix pages always runs
         before a group that reads them."""
         admitted: list[tuple[int, Request, np.ndarray, int, list]] = []
+        staged_promotes: list = []
         for i in range(self.slots):
             if self.active[i] is not None or not self.queue:
                 continue
@@ -635,10 +636,13 @@ class ServeEngine:
                 if info is None:
                     break                # head-of-line waits for pages
                 if info["promotes"]:
-                    # host→HBM DMA for the matched demoted suffix; must
-                    # land before any COW copy or prefill reads the pages
-                    self.caches = self.kv.apply_promote(
-                        self.caches, info["promotes"])
+                    # host→HBM DMA for the matched demoted suffix: start
+                    # the transfers NOW so they overlap the rest of the
+                    # admission loop (hashing, COW planning, further
+                    # admissions); the page scatters land below, before
+                    # any COW copy or prefill group can read the pages
+                    staged_promotes.extend(
+                        self.kv.start_promote(info["promotes"]))
                 cached = info["cached_len"]
                 cow_pairs = info["cow_pairs"]
                 if info["reused"]:
@@ -654,6 +658,9 @@ class ServeEngine:
                 # (re-)open the request's draft history with the full
                 # resume stream — preemption replay starts clean
                 self.proposer.begin(req.rid, tokens)
+        if staged_promotes:
+            self.caches = self.kv.apply_promote(self.caches,
+                                                staged_promotes)
         if not admitted:
             return
         by_group: dict[tuple[int, int], list] = {}
@@ -717,6 +724,11 @@ class ServeEngine:
         self.stats["preemptions"] += 1
         self.queue.insert(0, req)
 
+    def _preempt_candidates(self) -> list:
+        """Slots eligible as preemption victims (the async engine extends
+        this with its mid-prefill slots, which hold pages too)."""
+        return [j for j, r in enumerate(self.active) if r is not None]
+
     def _ensure_pages(self, n: int) -> None:
         """Reserve every active slot's worst-case page growth for an
         ``n``-step decode chunk, oldest slot first; on pool exhaustion the
@@ -732,9 +744,8 @@ class ServeEngine:
                     int(min(n, self.remaining[i]))
                 if self.kv.grow(i, target):
                     break
-                act = [j for j, r in enumerate(self.active)
-                       if r is not None]
-                victim = max(act, key=lambda j: self._order[j])
+                victim = max(self._preempt_candidates(),
+                             key=lambda j: self._order[j])
                 self._preempt(victim)
 
     def _sync_live_peak(self) -> None:

@@ -724,7 +724,26 @@ class PagedKVCache:
         """Longest indexed prefix of ``tokens``, in full pages."""
         return self._match(self._chain_hashes(tokens))
 
-    def admit(self, slot: int, tokens, kv_target: int) -> Optional[dict]:
+    def register_progress(self, slot: int, tokens, upto: int) -> None:
+        """Index the slot's prompt pages that are fully *written* —
+        positions [0, upto) have been prefilled.  The async engine's
+        interleaved prefill admits with ``register=False`` and calls this
+        after every quantum dispatch: pages enter the index only once
+        their writer has dispatched, so a concurrent admission can never
+        map (and read) a page whose prefill has not happened yet.  Device
+        dispatch order then guarantees writer-before-reader for free.
+        Idempotent — already-indexed pages dedupe in :meth:`_register`."""
+        if not self.prefix_enabled:
+            return
+        c = self.classes["full"]
+        n = min(int(upto), len(tokens)) // self.page_size
+        if n <= 0 or n > len(c.owned[slot]):
+            return
+        hashes = self._chain_hashes(tokens[:n * self.page_size])
+        self._register(hashes, c.owned[slot][:n])
+
+    def admit(self, slot: int, tokens, kv_target: int,
+              register: bool = True) -> Optional[dict]:
         """Build ``slot``'s block table for a request: map the longest
         indexed prefix (shared pages, one reference each), schedule a COW
         copy of the single page a tail prefill could write into (only when
@@ -749,6 +768,12 @@ class PagedKVCache:
         slot's prefill.  If the pool cannot hold the promotions even
         after eviction, the match falls back to the resident prefix and
         the demoted tail stays on the host tier.
+
+        ``register=False`` defers the pre-registration entirely: the
+        caller indexes pages progressively via :meth:`register_progress`
+        as its prefill quanta dispatch (the async engine's interleaved
+        prefill — where the prompt's later pages stay unwritten for many
+        scheduler turns and must not be matchable in between).
 
         All-or-nothing: returns None (state unchanged) when the pool is
         short even after LRU eviction; otherwise
@@ -819,7 +844,8 @@ class PagedKVCache:
         c.table[slot, :len(row)] = row
         c.table[slot, len(row):] = self._sentinel(c)
         c.owned[slot] = list(row)
-        self._register(hashes, row)
+        if register:
+            self._register(hashes, row)
         self._touch_peaks()
         return {"cached_len": cached_len,
                 "reused": cached_len if m else 0,
@@ -903,6 +929,19 @@ class PagedKVCache:
             fn = jax.jit(run, donate_argnums=donate)
             self._promote_jit = fn
         return fn
+
+    def start_promote(self, promotes: List[Tuple[int, list]]
+                      ) -> List[Tuple[int, list]]:
+        """Launch the host→HBM transfers for promotion blobs *without*
+        applying the page scatters: each blob is handed to
+        ``jax.device_put`` immediately, which begins an async DMA the
+        caller can overlap with host-side admission work (hashing, COW
+        planning, further admissions) and with unrelated device
+        dispatches.  Returns the promote list with device-resident blobs
+        — feed it to :meth:`apply_promote` (whose ``jnp.asarray`` is then
+        a no-op) before anything reads the destination pages."""
+        return [(dst, [jax.device_put(b) for b in blobs])
+                for dst, blobs in promotes]
 
     def apply_promote(self, caches,
                       promotes: List[Tuple[int, list]]):
